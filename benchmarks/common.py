@@ -1,0 +1,94 @@
+"""Shared benchmark scaffolding: the paper's evaluation setup (§V-A).
+
+One class (read, 3 MB), L = 16 threads, k_max = 6, r_max = 2, synthetic
+North-California-calibrated traces; arrival-rate grids as fractions of the
+basic (1,1) capacity. CSV artifacts land in benchmarks/results/.
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+import numpy as np
+
+from repro.core import (
+    PAPER_READ_3MB,
+    FixedKAdaptivePolicy,
+    GreedyPolicy,
+    RequestClass,
+    StaticPolicy,
+    TOFECPolicy,
+)
+from repro.core import queueing
+from repro.core.simulator import poisson_arrivals, simulate
+from repro.core.traces import TraceSampler
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+CLS = RequestClass("read3mb", 3.0, PAPER_READ_3MB, k_max=6, r_max=2.0, n_max=12)
+L = 16
+CAPACITY_BASIC = queueing.capacity(PAPER_READ_3MB, CLS.file_mb, 1, 1.0, L)  # ≈ 76.5 req/s
+
+SAMPLER = TraceSampler(PAPER_READ_3MB, CLS.file_mb, correlation=0.14)  # Shared Key
+
+
+def all_static_codes(k_max: int = 6, r_max: float = 2.0, n_max: int = 12):
+    """Every (n, k) with k ≤ k_max, k ≤ n ≤ min(r_max·k, n_max)."""
+    out = []
+    for k in range(1, k_max + 1):
+        for n in range(k, min(int(r_max * k), n_max) + 1):
+            out.append((n, k))
+    return out
+
+
+def run_policy(policy, lam: float, count: int = 4000, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    arr = poisson_arrivals(rng, lam, count)
+    return simulate(policy, arr, SAMPLER, L=L, seed=seed + 17)
+
+
+def rate_grid(n: int = 8, lo_frac: float = 0.1, hi_frac: float = 0.92):
+    return np.linspace(lo_frac * CAPACITY_BASIC, hi_frac * CAPACITY_BASIC, n)
+
+
+def fresh_tofec(alpha: float = 0.99) -> TOFECPolicy:
+    return TOFECPolicy.for_classes([CLS], L, alpha=alpha)
+
+
+def fresh_greedy() -> GreedyPolicy:
+    return GreedyPolicy(CLS.k_max, CLS.r_max)
+
+
+def fresh_fixedk(k: int = 6) -> FixedKAdaptivePolicy:
+    return FixedKAdaptivePolicy(CLS, L, k=k)
+
+
+def write_csv(name: str, header: list[str], rows: list[list]):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+class BenchTimer:
+    """Context helper: report `name,us_per_call,derived` lines."""
+
+    def __init__(self, name: str, calls: int = 1):
+        self.name = name
+        self.calls = calls
+
+    def __enter__(self):
+        self.t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed = time.monotonic() - self.t0
+
+    def row(self, derived: str) -> str:
+        us = 1e6 * self.elapsed / max(self.calls, 1)
+        return f"{self.name},{us:.1f},{derived}"

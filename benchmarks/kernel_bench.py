@@ -1,0 +1,64 @@
+"""Kernel micro-benchmarks: GF(2) bit-matrix RS encode (Pallas, interpret)
+vs the table-based GF(256) jnp oracle, plus the checkpoint encode path.
+
+On CPU the Pallas kernel runs in interpret mode, so wall-clock here measures
+the *reference environment*, not TPU perf — the TPU story is the §Roofline
+arithmetic-intensity argument (bit-matrix matmul is MXU-shaped; table
+lookups are not). We report both wall time and derived arithmetic intensity.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BenchTimer
+from repro.coding import rs
+from repro.kernels.gf2mm import gf2mm, ops, ref
+
+
+def bench_gf2mm(n: int = 12, k: int = 6, B: int = 16384) -> list[str]:
+    rng = np.random.default_rng(0)
+    data = jnp.asarray(rng.integers(0, 256, size=(k, B), dtype=np.uint8))
+
+    enc = jax.jit(lambda d: ops.rs_encode(d, n=n, k=k, interpret=True))
+    enc(data).block_until_ready()
+    with BenchTimer("kernel_rs_encode_pallas", calls=3) as t1:
+        for _ in range(3):
+            enc(data).block_until_ready()
+
+    par = jnp.asarray(rs.cauchy_parity_matrix(n, k))
+    ref_fn = jax.jit(lambda d: ref.gf256_matmul_ref(par, d))
+    ref_fn(data).block_until_ready()
+    with BenchTimer("kernel_rs_encode_tableref", calls=3) as t2:
+        for _ in range(3):
+            ref_fn(data).block_until_ready()
+
+    # Derived: GF(2) matmul arithmetic intensity on TPU for this shape.
+    M, K = 8 * (n - k), 8 * k
+    flops = 2 * M * K * B  # MXU MACs on bit-planes
+    bytes_ = (M * K + K * B + M * B)  # bf16→1B-ish planes; order of magnitude
+    return [
+        t1.row(f"payload={k * B / 2 ** 20:.1f}MB"),
+        t2.row(f"bitmm_arith_intensity={flops / bytes_:.1f}flop/B"),
+    ]
+
+
+def bench_ckpt_encode(leaf_mb: int = 1) -> list[str]:
+    rng = np.random.default_rng(1)
+    payload = rng.integers(0, 256, size=leaf_mb * 2**20, dtype=np.uint8)
+    with BenchTimer("ckpt_encode_blob", calls=1) as t:
+        strips = ops.encode_blob(payload, n=8, k=4)
+    present = (1, 3, 5, 7)
+    with BenchTimer("ckpt_decode_blob", calls=1) as t2:
+        out = ops.decode_blob(strips[list(present)], present, n=8, k=4,
+                              payload_len=payload.size)
+    assert np.array_equal(out, payload)
+    mbps = leaf_mb / t.elapsed
+    return [t.row(f"encode_{leaf_mb}MB@{mbps:.1f}MB/s"), t2.row("decode_ok")]
+
+
+ALL_KERNEL = [bench_gf2mm, bench_ckpt_encode]

@@ -1,0 +1,64 @@
+"""Serving demo: batched decode with erasure-coded prompt storage.
+
+Prompts live in the emulated store as Shared-Key coded objects; the proxy
+fetches them with adaptive (n, k) ranged reads under an S3-like latency
+model, tolerating injected read failures; the LM then prefills + decodes.
+
+Run:  PYTHONPATH=src python examples/serve_demo.py
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.coding.layout import SharedKeyLayout
+from repro.configs.qwen1_5_0_5b import CONFIG as QWEN
+from repro.core import PAPER_READ_3MB, RequestClass, TOFECPolicy
+from repro.models.registry import Arch, _FAMILY_MODULES
+from repro.serve import ServingEngine
+from repro.storage import FaultyStore, LatencyStore, MemoryStore, Proxy
+from repro.storage.proxy import store_coded_object
+
+CFG = dataclasses.replace(
+    QWEN, name="serve-demo", n_layers=4, d_model=256, n_heads=8, n_kv_heads=8,
+    d_ff=512, vocab=4096,
+)
+
+
+def main():
+    arch = Arch(cfg=CFG, module=_FAMILY_MODULES["dense"])
+    params = arch.init(jax.random.key(0))
+    eng = ServingEngine(arch, params, max_seq=96)
+
+    prompt_len = 32
+    layout = SharedKeyLayout(K=4, r=2, strip_bytes=prompt_len)
+    inner = MemoryStore()
+    store = FaultyStore(
+        LatencyStore(inner, PAPER_READ_3MB, time_scale=1e-3, seed=2), p_fail=0.15, seed=3
+    )
+    rng = np.random.default_rng(1)
+    keys = []
+    for i in range(6):
+        toks = rng.integers(0, CFG.vocab, size=(prompt_len,)).astype(np.int32)
+        store_coded_object(inner, f"prompt/{i}", layout, toks.tobytes())
+        keys.append(f"prompt/{i}")
+
+    cls = RequestClass("prompt", prompt_len * 4 / 2**20, PAPER_READ_3MB,
+                       k_max=4, r_max=2.0, n_max=8)
+    proxy = Proxy(store, TOFECPolicy.for_classes([cls], L=8), L=8)
+    try:
+        res = eng.serve(proxy, layout, keys, prompt_len=prompt_len, steps=8)
+        print("generated token grid (batch × steps):")
+        print(res.tokens)
+        print("\nper-prompt storage fetch: code (n,k), delay")
+        for key, code, d in zip(keys, res.codes, res.storage_total_s):
+            print(f"  {key}: ({code[0]},{code[1]})  {d * 1e3:.1f} ms wall")
+        print(f"\n15% injected read-failure rate absorbed by erasure coding; "
+              f"{sum(r.failures for r in proxy.results)} task failures total")
+    finally:
+        proxy.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: TOFEC (Liang & Kozat 2013) as the storage/IO layer of a multi-pod
+JAX LM training/serving framework. See DESIGN.md."""

@@ -1,0 +1,6 @@
+from repro.ckpt.checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)

@@ -1,0 +1,12 @@
+from repro.coding import gf256, layout, rs
+from repro.coding.layout import SharedKeyLayout, layout_for_file
+from repro.coding.rs import MDSCode
+
+__all__ = [
+    "gf256",
+    "rs",
+    "layout",
+    "MDSCode",
+    "SharedKeyLayout",
+    "layout_for_file",
+]

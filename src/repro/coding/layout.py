@@ -1,0 +1,128 @@
+"""Shared-Key strip layout (paper §II-B, §III, Fig.3).
+
+One (N = r*K, K) MDS codeword over b-byte *strips* is stored as a single
+coded object of N*b bytes. For every divisor m of K it simultaneously acts
+as an (n = N/m, k = K/m) MDS code over B = m*b-byte *chunks*: chunk i is the
+contiguous strip range [i*m, (i+1)*m), fetched with one ranged read. Any k
+chunks cover k*m = K strips, which reconstruct the file.
+
+This is what makes variable chunk sizing storage-efficient: one stored
+object (cost r × file size) supports every chunking level, vs. Unique-Key's
+extra r × file size *per chunk size* (§III-A.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.coding import rs
+
+
+def divisors(x: int) -> list[int]:
+    return [d for d in range(1, x + 1) if x % d == 0]
+
+
+@dataclasses.dataclass(frozen=True)
+class SharedKeyLayout:
+    """Layout parameters for one file class.
+
+    K: code dimension at strip granularity (max chunking level k_max).
+    r: integer redundancy ratio (N = r*K).
+    strip_bytes: b. File payload is K*b bytes (padded if shorter).
+    """
+
+    K: int
+    r: int
+    strip_bytes: int
+
+    def __post_init__(self):
+        if self.K < 1 or self.r < 1 or self.strip_bytes < 1:
+            raise ValueError("K, r, strip_bytes must be positive")
+        if self.N > 256:
+            raise ValueError("N = r*K must be <= 256 for GF(256) RS")
+
+    @property
+    def N(self) -> int:
+        return self.r * self.K
+
+    @property
+    def file_bytes(self) -> int:
+        return self.K * self.strip_bytes
+
+    @property
+    def object_bytes(self) -> int:
+        return self.N * self.strip_bytes
+
+    def supported_k(self) -> list[int]:
+        """Chunk-level code dimensions k available from this one object."""
+        return sorted(self.K // m for m in divisors(self.K))
+
+    def code_for_k(self, k: int) -> tuple[int, int, int]:
+        """(n_max, k, m) for a chunk-level dimension k; n_max = N/m."""
+        if self.K % k != 0:
+            raise ValueError(f"k={k} must divide K={self.K}")
+        m = self.K // k
+        if self.N % m != 0:
+            raise ValueError(f"m={m} must divide N={self.N}")
+        return self.N // m, k, m
+
+    def chunk_bytes(self, k: int) -> int:
+        """B = J / k for chunk-level dimension k."""
+        _, _, m = self.code_for_k(k)
+        return m * self.strip_bytes
+
+    def chunk_range(self, k: int, chunk_idx: int) -> tuple[int, int]:
+        """(offset, length) byte range of chunk ``chunk_idx`` at level k.
+
+        This is the argument to the storage partial-read API
+        (S3 getObject with setRange / Azure DownloadRangeToStream).
+        """
+        n_max, _, m = self.code_for_k(k)
+        if not 0 <= chunk_idx < n_max:
+            raise ValueError(f"chunk_idx {chunk_idx} out of range for n_max={n_max}")
+        off = chunk_idx * m * self.strip_bytes
+        return off, m * self.strip_bytes
+
+    # -- encode / decode ----------------------------------------------------
+
+    def encode_file(self, payload: bytes) -> bytes:
+        """Pad payload to K*b, strip-encode, return the N*b coded object."""
+        if len(payload) > self.file_bytes:
+            raise ValueError(f"payload {len(payload)}B exceeds {self.file_bytes}B")
+        buf = np.zeros(self.file_bytes, dtype=np.uint8)
+        buf[: len(payload)] = np.frombuffer(payload, dtype=np.uint8)
+        data = buf.reshape(self.K, self.strip_bytes)
+        coded = rs.encode(data, self.N, self.K)
+        return coded.tobytes()
+
+    def reconstruct(self, k: int, chunks: dict[int, bytes], payload_len: int | None = None) -> bytes:
+        """Rebuild the file from any >= k chunk-level fetches at level k.
+
+        ``chunks`` maps chunk index (at level k) -> chunk bytes. Exactly the
+        first k (by index order) are used; extras are ignored (they are the
+        redundant tasks the proxy cancels late).
+        """
+        n_max, _, m = self.code_for_k(k)
+        if len(chunks) < k:
+            raise ValueError(f"need >= {k} chunks, got {len(chunks)}")
+        use = sorted(chunks)[:k]
+        strip_ids: list[int] = []
+        rows = np.empty((k * m, self.strip_bytes), dtype=np.uint8)
+        for slot, ci in enumerate(use):
+            blob = np.frombuffer(chunks[ci], dtype=np.uint8)
+            if blob.size != m * self.strip_bytes:
+                raise ValueError(f"chunk {ci}: got {blob.size}B, want {m * self.strip_bytes}B")
+            rows[slot * m : (slot + 1) * m] = blob.reshape(m, self.strip_bytes)
+            strip_ids.extend(range(ci * m, (ci + 1) * m))
+        data = rs.decode(rows, tuple(strip_ids), self.N, self.K)
+        out = data.reshape(-1).tobytes()
+        return out if payload_len is None else out[:payload_len]
+
+
+def layout_for_file(file_bytes: int, k_max: int, r_max: int) -> SharedKeyLayout:
+    """Choose strip size so K = k_max strips cover the file (paper §V-A uses
+    k_max = 6, r_max = 2 for 3MB files -> 0.5MB strips, (12, 6) strip code)."""
+    strip = -(-file_bytes // k_max)  # ceil
+    return SharedKeyLayout(K=k_max, r=r_max, strip_bytes=strip)

@@ -1,0 +1,46 @@
+"""TOFEC core: the paper's contribution (delay model, Theorem-1 optimizer,
+threshold-based adaptive controller, queueing simulators)."""
+
+from repro.core.controller import (
+    FixedKAdaptivePolicy,
+    GreedyPolicy,
+    Policy,
+    StaticPolicy,
+    TofecTables,
+    TOFECPolicy,
+    tofec_step_jax,
+)
+from repro.core.delay_model import (
+    PAPER_READ_3MB,
+    PAPER_WRITE_3MB,
+    DelayParams,
+    RequestClass,
+    fit_delay_params,
+)
+from repro.core.static_optimizer import (
+    ClassPlan,
+    build_class_plan,
+    optimal_static_code,
+    q_for_k,
+    solve_r_for_k,
+)
+
+__all__ = [
+    "DelayParams",
+    "RequestClass",
+    "fit_delay_params",
+    "PAPER_READ_3MB",
+    "PAPER_WRITE_3MB",
+    "Policy",
+    "StaticPolicy",
+    "TOFECPolicy",
+    "GreedyPolicy",
+    "FixedKAdaptivePolicy",
+    "TofecTables",
+    "tofec_step_jax",
+    "ClassPlan",
+    "build_class_plan",
+    "optimal_static_code",
+    "solve_r_for_k",
+    "q_for_k",
+]

@@ -1,0 +1,283 @@
+"""Code-selection policies (§IV-C, §V-A).
+
+Every policy answers one question at request-arrival time: which (n, k) MDS
+code serves this request. Inputs available to a policy (mirroring what the
+paper's proxy can observe locally): the instantaneous request-queue length
+``q`` and the number of idle threads ``idle``.
+
+Policies:
+  * StaticPolicy(n, k)           — the paper's static strategies (incl. basic
+                                   (1,1) and simple replication (2,1)).
+  * TOFECPolicy                  — the paper's adaptive algorithm: EWMA of q
+                                   against the H^N / H^K threshold tables.
+  * GreedyPolicy                 — §V-A heuristic from idle-thread count.
+  * FixedKAdaptivePolicy         — the strategy of [3]: k fixed, n adapted
+                                   (backlog-driven via the same machinery).
+
+A jit-friendly functional form of the TOFEC update is provided in
+:func:`tofec_step_jax` so the serving engine can run the controller inside a
+compiled step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.delay_model import RequestClass
+from repro.core.static_optimizer import ClassPlan, build_class_plan
+
+
+class Policy:
+    """Interface: observe arrival, emit (n, k)."""
+
+    name: str = "policy"
+
+    def select(self, *, q: int, idle: int, cls_id: int = 0, now: float | None = None) -> tuple[int, int]:
+        raise NotImplementedError
+
+    def reset(self) -> None:  # pragma: no cover - default no state
+        pass
+
+
+@dataclasses.dataclass
+class StaticPolicy(Policy):
+    n: int
+    k: int
+
+    def __post_init__(self):
+        if self.n < self.k or self.k < 1:
+            raise ValueError(f"invalid static code ({self.n},{self.k})")
+        self.name = f"static({self.n},{self.k})"
+
+    def select(self, *, q: int, idle: int, cls_id: int = 0, now: float | None = None) -> tuple[int, int]:
+        return self.n, self.k
+
+
+class TOFECPolicy(Policy):
+    """The paper's algorithm (§IV-C pseudocode), per-class thresholds.
+
+    q̄ ← αq + (1−α)q̄ on each arrival; k and n from threshold lookup;
+    n ← min(r_max·k, n); guard n ≥ k.
+    """
+
+    def __init__(self, plans: list[ClassPlan], alpha: float = 0.99):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError("memory factor must be in (0, 1]")
+        self.plans = plans
+        self.alpha = alpha
+        self.name = f"tofec(alpha={alpha})"
+        self.reset()
+
+    @classmethod
+    def for_classes(
+        cls, classes: list[RequestClass], L: int, alpha: float = 0.99, eq7_factor: float = 2.0
+    ) -> "TOFECPolicy":
+        return cls([build_class_plan(c, L, eq7_factor=eq7_factor) for c in classes], alpha)
+
+    def reset(self) -> None:
+        self.q_ewma = 0.0
+
+    def select(self, *, q: int, idle: int, cls_id: int = 0, now: float | None = None) -> tuple[int, int]:
+        self.q_ewma = self.alpha * q + (1.0 - self.alpha) * self.q_ewma
+        return self.plans[cls_id].pick_code(self.q_ewma)
+
+
+@dataclasses.dataclass
+class GreedyPolicy(Policy):
+    """§V-A Greedy: chunk as much as idle threads allow, then add redundancy.
+
+    Paper's printed formula sets n = min(k_max, l) which would force n = k;
+    the prose ("then increase the redundancy ratio as long as there are idle
+    threads remain") implies n = min(r_max·k, l). We implement the prose and
+    note the discrepancy.
+    """
+
+    k_max: int
+    r_max: float
+
+    def __post_init__(self):
+        self.name = "greedy"
+
+    def select(self, *, q: int, idle: int, cls_id: int = 0, now: float | None = None) -> tuple[int, int]:
+        if idle <= 0:
+            return 1, 1
+        k = min(self.k_max, idle)
+        n = min(int(self.r_max * k), max(idle, 1))
+        return max(n, k), k
+
+
+class FixedKAdaptivePolicy(Policy):
+    """The adaptive strategy of [3]: fixed code dimension k, n adapted to
+    backlog. Uses the Eq.7-analogue at fixed k: r(r−1) =
+    f·L(Ψ̄k + Ψ̃J) / (k(Δ̄k + Δ̃J)((L/(L−λ̄))² − 1)), n = k·r, thresholded
+    the same way as TOFEC.
+    """
+
+    def __init__(
+        self,
+        cls_: RequestClass,
+        L: int,
+        k: int,
+        alpha: float = 0.99,
+        eq7_factor: float = 2.0,
+    ):
+        self.cls = cls_
+        self.k = k
+        self.alpha = alpha
+        self.name = f"fixedk(k={k})"
+        p, J = cls_.params, cls_.file_mb
+        c = (
+            eq7_factor
+            * L
+            * (p.psi_bar * k + p.psi_tilde * J)
+            / (k * (p.delta_bar * k + p.delta_tilde * J))
+        )
+
+        # Q at which n is optimal (n = k..n_max): from r = n/k,
+        # (L/(L−λ̄))² − 1 = c / (r(r−1)) → λ̄ → Q.
+        def q_for_n(n: int) -> float:
+            r = n / k
+            if r <= 1.0:
+                return math.inf  # n = k only optimal at overload (Q → ∞)
+            pi = c / (r * (r - 1.0))
+            lam_bar = L * (1.0 - 1.0 / math.sqrt(1.0 + pi))
+            return lam_bar**2 / (L * (L - lam_bar))
+
+        n_values = list(range(k, cls_.n_max + 1))
+        q_tab = np.array([q_for_n(n) for n in n_values])
+        h = np.empty(len(n_values) + 1)
+        h[0] = math.inf
+        for j in range(1, len(n_values)):
+            h[j] = 0.5 * (q_tab[j] + q_tab[j - 1])
+        h[-1] = 0.0
+        self.n_values = n_values
+        self.h_n = h
+        self.reset()
+
+    def reset(self) -> None:
+        self.q_ewma = 0.0
+
+    def select(self, *, q: int, idle: int, cls_id: int = 0, now: float | None = None) -> tuple[int, int]:
+        self.q_ewma = self.alpha * q + (1.0 - self.alpha) * self.q_ewma
+        j = int(np.searchsorted(-self.h_n[1:], -self.q_ewma, side="left"))
+        n = self.n_values[min(j, len(self.n_values) - 1)]
+        return n, self.k
+
+
+# ---------------------------------------------------------------------------
+# JAX functional form (used inside jitted serving steps)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TofecTables:
+    """Static threshold tables as device arrays (one class)."""
+
+    h_k: jax.Array  # (k_max + 1,) descending, h_k[0] = +inf
+    h_n: jax.Array  # (n_max + 1,)
+    r_max: float = dataclasses.field(metadata=dict(static=True))
+
+    @classmethod
+    def from_plan(cls, plan: ClassPlan) -> "TofecTables":
+        big = jnp.float32(jnp.finfo(jnp.float32).max)
+        h_k = jnp.asarray(plan.h_k, jnp.float32)
+        h_n = jnp.asarray(plan.h_n, jnp.float32)
+        h_k = jnp.where(jnp.isinf(h_k), big, h_k)
+        h_n = jnp.where(jnp.isinf(h_n), big, h_n)
+        return cls(h_k=h_k, h_n=h_n, r_max=plan.cls.r_max)
+
+
+def tofec_step_jax(
+    q_ewma: jax.Array, q: jax.Array, tables: TofecTables, alpha: float
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One arrival update, fully traceable: returns (q̄', n, k).
+
+    Same semantics as :class:`TOFECPolicy.select` (threshold search =
+    1 + #{h > q̄} over the descending tables).
+    """
+    q_new = alpha * q + (1.0 - alpha) * q_ewma
+    k = 1 + jnp.sum(tables.h_k[1:] > q_new).astype(jnp.int32)
+    n = 1 + jnp.sum(tables.h_n[1:] > q_new).astype(jnp.int32)
+    n = jnp.minimum((tables.r_max * k).astype(jnp.int32), n)
+    n = jnp.maximum(n, k)
+    return q_new, n, k
+
+
+class MPCPolicy(Policy):
+    """Beyond-paper controller: discrete model-predictive code selection.
+
+    Instead of inverting the continuous relaxation into thresholds (§IV-C),
+    estimate the arrival rate online (interarrival EWMA) and pick the
+    discrete (n, k) minimizing the paper's own cost model
+
+        D̂(n, k) = D_q^{M/M/1}(λ̂, U(n, k)) + D_s^{exact}(n, k)
+
+    over the feasible code set, rejecting codes with λ̂·U ≥ util_cap·L.
+    Falls back to max chunking until a rate estimate exists. Motivation and
+    measured gains vs the threshold controller: EXPERIMENTS.md §Perf
+    (controller hillclimb).
+    """
+
+    def __init__(
+        self,
+        cls_: RequestClass,
+        L: int,
+        *,
+        alpha_rate: float = 0.05,
+        util_cap: float = 0.9,
+        q_guard: float = 4.0,
+    ):
+        from repro.core import queueing as _q
+
+        self.cls = cls_
+        self.L = L
+        self.alpha_rate = alpha_rate
+        self.util_cap = util_cap
+        self.q_guard = q_guard
+        self.name = "mpc"
+        p, J = cls_.params, cls_.file_mb
+        self.codes = []
+        for k in range(1, cls_.k_max + 1):
+            for n in range(k, min(int(cls_.r_max * k), cls_.n_max) + 1):
+                u = _q.usage(p, J, k, n / k)
+                ds = _q.service_delay_exact(p, J, k, n)
+                self.codes.append((n, k, u, ds))
+        self.reset()
+
+    def reset(self) -> None:
+        self.mean_ia = None
+        self.last_arrival = None
+        self.q_ewma = 0.0
+
+    def select(self, *, q: int, idle: int, cls_id: int = 0, now: float | None = None) -> tuple[int, int]:
+        self.q_ewma = 0.1 * q + 0.9 * self.q_ewma
+        if now is not None:
+            if self.last_arrival is not None:
+                ia = max(now - self.last_arrival, 1e-9)
+                self.mean_ia = (
+                    ia if self.mean_ia is None
+                    else (1 - self.alpha_rate) * self.mean_ia + self.alpha_rate * ia
+                )
+            self.last_arrival = now
+        if self.mean_ia is None:
+            best = max(self.codes, key=lambda c: (c[1], c[0]))
+            return best[0], best[1]
+        lam = 1.0 / self.mean_ia
+        best, best_cost = (1, 1), float("inf")
+        for n, k, u, ds in self.codes:
+            lam_bar = lam * u
+            if lam_bar >= self.util_cap * self.L:
+                continue
+            dq = lam_bar * u / (self.L * (self.L - lam_bar))
+            # backlog guard: sustained queue penalizes expensive codes.
+            dq *= 1.0 + self.q_ewma / self.q_guard
+            cost = dq + ds
+            if cost < best_cost:
+                best_cost, best = cost, (n, k)
+        return best

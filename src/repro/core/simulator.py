@@ -1,0 +1,228 @@
+"""Discrete-event simulator of the proxy queueing system (Fig.2).
+
+Faithful to §II-A semantics:
+  * FIFO request queue; FIFO task queue; L threads.
+  * The head-of-line request is admitted only when at least one thread is
+    idle AND the task queue is empty; its n tasks are then injected.
+  * Tasks start on idle threads in FIFO order; per-batch task delays are
+    pre-sampled jointly (preserving Shared-Key cross-thread correlation;
+    "the i-th thread downloads the i-th coded chunk", §III-B).
+  * When k tasks of a request have completed, the request departs and its
+    remaining tasks are preemptively cancelled: queued ones are removed,
+    in-service ones release their thread immediately (§II-A, footnote 1).
+  * Work conserving: freed threads immediately pull queued tasks, and
+    admission re-runs whenever a thread frees or the task queue drains.
+
+Delay bookkeeping matches §II-C: D_q = T_1 − T_A (first task start minus
+arrival), D_s = X_(k) − T_1, total = D_q + D_s.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from collections import deque
+
+import numpy as np
+
+from repro.core.controller import Policy
+
+
+@dataclasses.dataclass
+class RequestStats:
+    arrival: float
+    cls_id: int
+    n: int
+    k: int
+    t_first_start: float = np.nan
+    t_done: float = np.nan
+    completed_tasks: int = 0
+
+    @property
+    def d_q(self) -> float:
+        return self.t_first_start - self.arrival
+
+    @property
+    def d_s(self) -> float:
+        return self.t_done - self.t_first_start
+
+    @property
+    def total(self) -> float:
+        return self.t_done - self.arrival
+
+
+@dataclasses.dataclass
+class SimResult:
+    stats: list[RequestStats]
+    horizon: float
+
+    def totals(self) -> np.ndarray:
+        return np.array([s.total for s in self.stats])
+
+    def service(self) -> np.ndarray:
+        return np.array([s.d_s for s in self.stats])
+
+    def queueing(self) -> np.ndarray:
+        return np.array([s.d_q for s in self.stats])
+
+    def ks(self) -> np.ndarray:
+        return np.array([s.k for s in self.stats])
+
+    def ns(self) -> np.ndarray:
+        return np.array([s.n for s in self.stats])
+
+    def throughput(self) -> float:
+        return len(self.stats) / self.horizon if self.horizon > 0 else 0.0
+
+    def k_composition(self, k_max: int) -> np.ndarray:
+        """Fraction of requests served at each k = 1..k_max (Fig.8)."""
+        ks = self.ks()
+        return np.array([(ks == k).mean() for k in range(1, k_max + 1)])
+
+    def summary(self) -> dict:
+        t = self.totals()
+        if len(t) == 0:
+            return {"count": 0}
+        return {
+            "count": len(t),
+            "mean": float(t.mean()),
+            "median": float(np.median(t)),
+            "p90": float(np.percentile(t, 90)),
+            "p99": float(np.percentile(t, 99)),
+            "std": float(t.std()),
+            "mean_k": float(self.ks().mean()),
+            "mean_n": float(self.ns().mean()),
+            "throughput": float(self.throughput()),
+        }
+
+
+class _Task:
+    __slots__ = ("req", "delay", "cancelled", "started", "done")
+
+    def __init__(self, req, delay: float):
+        self.req = req
+        self.delay = delay
+        self.cancelled = False
+        self.started = False
+        self.done = False
+
+
+class _Request:
+    __slots__ = ("stats", "tasks")
+
+    def __init__(self, stats: RequestStats):
+        self.stats = stats
+        self.tasks: list[_Task] = []
+
+
+def simulate(
+    policy: Policy,
+    arrivals: np.ndarray,
+    sampler,
+    *,
+    L: int = 16,
+    cls_ids: np.ndarray | None = None,
+    samplers: list | None = None,
+    seed: int = 0,
+    warmup_frac: float = 0.05,
+) -> SimResult:
+    """Run the event simulation over the given arrival times.
+
+    ``sampler``: object with .sample(rng, k, n) → (n,) task delays (used for
+    cls 0); ``samplers`` optionally overrides per class.
+    """
+    rng = np.random.default_rng(seed)
+    arrivals = np.asarray(arrivals, dtype=np.float64)
+    if cls_ids is None:
+        cls_ids = np.zeros(len(arrivals), dtype=np.int64)
+    samplers = samplers or [sampler]
+    policy.reset()
+
+    seq = itertools.count()
+    events: list = []  # (time, seq, kind, payload)
+    for t, c in zip(arrivals, cls_ids):
+        heapq.heappush(events, (float(t), next(seq), 0, int(c)))  # 0 = arrival
+
+    request_queue: deque[_Request] = deque()
+    task_queue: deque[_Task] = deque()
+    idle = L
+    now = 0.0
+    done_stats: list[RequestStats] = []
+
+    def start_tasks():
+        nonlocal idle
+        while idle > 0 and task_queue:
+            task = task_queue.popleft()
+            if task.cancelled:
+                continue
+            idle -= 1
+            task.started = True
+            req = task.req
+            if np.isnan(req.stats.t_first_start):
+                req.stats.t_first_start = now
+            heapq.heappush(events, (now + task.delay, next(seq), 1, task))
+
+    def admit():
+        while request_queue and idle > 0 and not task_queue:
+            req = request_queue.popleft()
+            st = req.stats
+            s = samplers[st.cls_id] if st.cls_id < len(samplers) else samplers[0]
+            delays = np.asarray(s.sample(rng, st.k, st.n), dtype=np.float64)
+            req.tasks = [_Task(req, float(d)) for d in delays]
+            task_queue.extend(req.tasks)
+            start_tasks()
+
+    while events:
+        now, _, kind, payload = heapq.heappop(events)
+        if kind == 0:  # arrival
+            cls_id = payload
+            n, k = policy.select(q=len(request_queue), idle=idle, cls_id=cls_id, now=now)
+            st = RequestStats(arrival=now, cls_id=cls_id, n=int(n), k=int(k))
+            request_queue.append(_Request(st))
+            admit()
+        else:  # task completion
+            task: _Task = payload
+            if task.cancelled or task.done:
+                continue
+            task.done = True
+            idle += 1
+            req = task.req
+            req.stats.completed_tasks += 1
+            if req.stats.completed_tasks == req.stats.k:
+                req.stats.t_done = now
+                done_stats.append(req.stats)
+                # Preemptive cancellation of the n − k leftovers.
+                for t2 in req.tasks:
+                    if not t2.done and not t2.cancelled:
+                        t2.cancelled = True
+                        if t2.started:
+                            idle += 1  # preempt in-service task
+            start_tasks()
+            admit()
+
+    horizon = float(arrivals[-1] - arrivals[0]) if len(arrivals) > 1 else 0.0
+    done_stats.sort(key=lambda s: s.arrival)
+    n_warm = int(len(done_stats) * warmup_frac)
+    return SimResult(stats=done_stats[n_warm:], horizon=horizon)
+
+
+def poisson_arrivals(rng: np.random.Generator, lam: float, count: int) -> np.ndarray:
+    return np.cumsum(rng.exponential(1.0 / lam, size=count))
+
+
+def piecewise_poisson_arrivals(
+    rng: np.random.Generator, rates: list[tuple[float, float]]
+) -> np.ndarray:
+    """Arrivals for consecutive (duration_s, rate) segments (Fig.10 setup)."""
+    out = []
+    t0 = 0.0
+    for dur, lam in rates:
+        t = t0
+        while True:
+            t += rng.exponential(1.0 / lam)
+            if t >= t0 + dur:
+                break
+            out.append(t)
+        t0 += dur
+    return np.asarray(out)

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: GF(2) matrix multiply (bit-matrix Reed-Solomon encode).
+
+TPU adaptation of the paper's MDS encode/decode hot loop (DESIGN.md §3):
+GF(256) arithmetic is lifted to GF(2) by expanding each field constant into
+its 8x8 binary multiplication matrix. Encoding k data strips of B bytes with
+an (n, k) generator then becomes
+
+    C2[8(n-k), B] = ( G2[8(n-k), 8k] @ D2[8k, B] ) mod 2
+
+where G2 is the expanded parity matrix and D2 the LSB-first bit-planes of
+the data. A 0/1 matmul with int accumulation is exactly MXU-shaped; the
+mod-2 runs in the epilogue on the VPU.
+
+The kernel is a classic three-level tiled matmul:
+  grid = (M / bm, N / bn, K / bk), K innermost ("arbitrary" semantics),
+  fp32 VMEM scratch accumulator, bf16 MXU operands (0/1 values are exact in
+  bf16; sums <= K <= 8*256 = 2048 are exact in fp32).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gf2mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k_tiles: int):
+    """One (bm, bn) output tile; accumulates over the K grid dimension."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.bfloat16)
+    b = b_ref[...].astype(jnp.bfloat16)
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k_tiles - 1)
+    def _epilogue():
+        # mod-2 of an exact small-integer float: cast and mask the LSB.
+        o_ref[...] = (acc_ref[...].astype(jnp.int32) & 1).astype(o_ref.dtype)
+
+
+def gf2_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 512,
+    block_k: int = 128,
+    out_dtype=jnp.uint8,
+    interpret: bool = False,
+) -> jax.Array:
+    """(A @ B) mod 2 for 0/1 matrices. A: (M, K), B: (K, N) -> (M, N).
+
+    Inputs may be any integer/float dtype holding 0/1 values. Dimensions are
+    padded to tile multiples internally (zero rows/cols contribute nothing).
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad shapes {a.shape} @ {b.shape}")
+    M, K = a.shape
+    _, N = b.shape
+    bm, bn, bk = block_m, block_n, block_k
+
+    Mp, Kp, Np = (-(-M // bm) * bm, -(-K // bk) * bk, -(-N // bn) * bn)
+    a_p = jnp.zeros((Mp, Kp), jnp.bfloat16).at[:M, :K].set(a.astype(jnp.bfloat16))
+    b_p = jnp.zeros((Kp, Np), jnp.bfloat16).at[:K, :N].set(b.astype(jnp.bfloat16))
+
+    n_k_tiles = Kp // bk
+    grid = (Mp // bm, Np // bn, n_k_tiles)
+
+    out = pl.pallas_call(
+        functools.partial(_gf2mm_kernel, n_k_tiles=n_k_tiles),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, t: (i, t)),
+            pl.BlockSpec((bk, bn), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:M, :N]

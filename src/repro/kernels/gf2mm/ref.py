@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the GF(2)/GF(256) encode path.
+
+``gf2_matmul_ref`` is the direct oracle for the Pallas kernel.
+``gf256_matmul_ref`` is the table-based GF(256) matmul — the "mechanical
+port" of CPU RS encode (gather-heavy; kept as oracle + benchmark baseline).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.coding import gf256
+
+
+def gf2_matmul_ref(a, b):
+    """(A @ B) mod 2 in int32; exact for 0/1 inputs."""
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    return (a @ b) % 2
+
+
+def _jnp_tables():
+    exp = jnp.asarray(gf256.exp_table(), jnp.int32)
+    log = jnp.asarray(gf256.log_table(), jnp.int32)
+    return exp, log
+
+
+def gf256_mul_ref(a, b):
+    """Elementwise GF(256) multiply via log/exp gathers (jnp)."""
+    exp, log = _jnp_tables()
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    out = exp[log[a] + log[b]]
+    return jnp.where((a == 0) | (b == 0), 0, out).astype(jnp.uint8)
+
+
+def gf256_matmul_ref(g, d):
+    """GF(256) matmul (n, k) @ (k, B) -> (n, B) via gathers + XOR reduce."""
+    g = jnp.asarray(g, jnp.int32)
+    d = jnp.asarray(d, jnp.int32)
+    prod = gf256_mul_ref(g[:, :, None], d[None, :, :]).astype(jnp.int32)
+    # XOR-reduce over the contraction axis, bit by bit is unnecessary:
+    # jnp has no bitwise_xor.reduce; fold with a loop over k (small).
+    out = jnp.zeros((g.shape[0], d.shape[1]), jnp.int32)
+    for t in range(g.shape[1]):  # k is small & static (<= 256)
+        out = jnp.bitwise_xor(out, prod[:, t, :])
+    return out.astype(jnp.uint8)
+
+
+def bytes_to_bitplanes_ref(data):
+    """(k, B) uint8 -> (8k, B) 0/1 uint8, LSB-first (jnp)."""
+    data = jnp.asarray(data, jnp.uint8)
+    k, B = data.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    planes = (data[:, None, :] >> shifts[None, :, None]) & 1
+    return planes.reshape(8 * k, B)
+
+
+def bitplanes_to_bytes_ref(planes):
+    """(8n, B) 0/1 -> (n, B) uint8 (jnp)."""
+    planes = jnp.asarray(planes, jnp.uint8)
+    n8, B = planes.shape
+    n = n8 // 8
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    grouped = planes.reshape(n, 8, B)
+    vals = grouped << shifts[None, :, None]
+    out = jnp.zeros((n, B), jnp.uint8)
+    for b in range(8):
+        out = jnp.bitwise_or(out, vals[:, b, :])
+    return out
+
+
+def rs_parity_ref(parity_gf256: np.ndarray, data):
+    """Oracle for the full encode path: parity rows = P ·_{GF256} data."""
+    return gf256_matmul_ref(jnp.asarray(parity_gf256), data)

@@ -1,0 +1,23 @@
+"""Production mesh builders.
+
+Single-pod: (16, 16) → ("data", "model") — 256 chips (one v5e pod).
+Multi-pod:  (2, 16, 16) → ("pod", "data", "model") — 512 chips.
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax import)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a 1-D 'data' mesh (tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -1,0 +1,177 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell.
+
+``input_specs(arch, shape)`` returns (fn, args_specs, in_specs_tree,
+out_shardings) ready for ``jax.jit(fn, ...).lower(*args_specs)`` — no device
+allocation anywhere (weights, optimizer state and caches are all abstract).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import SHAPES, ModelConfig, ShapeSpec
+from repro.models.registry import Arch, get
+from repro.models.sharding import axis_rules, pure_dp_rules, spec_for
+from repro.train.optimizer import init_opt_state
+from repro.train.train_step import batch_logical_axes, make_train_step
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, kind: str) -> dict:
+    B, S = shape.batch, shape.seq
+    out = {"tokens": _sds((B, S), jnp.int32)}
+    if kind == "train":
+        out["labels"] = _sds((B, S), jnp.int32)
+    if cfg.family == "encdec":
+        out["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        out["patches"] = _sds((B, cfg.vision_patches, cfg.d_model), jnp.float32)
+    return out
+
+
+def _abstract_params(arch: Arch):
+    return jax.eval_shape(lambda: arch.init(jax.random.key(0)))
+
+
+def _specs_tree(mesh, shapes_tree, logical_tree):
+    def one(sds, lg):
+        return NamedSharding(mesh, spec_for(tuple(sds.shape), tuple(lg)))
+
+    return jax.tree.map(
+        one, shapes_tree, logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and (len(x) == 0 or isinstance(x[0], (str, type(None)))),
+    )
+
+
+def _batch_shardings(mesh, cfg, batch_tree):
+    logical = batch_logical_axes(cfg)
+
+    def one(name, sds):
+        lg = logical.get(name, ("batch",) + (None,) * (len(sds.shape) - 1))
+        return NamedSharding(mesh, spec_for(tuple(sds.shape), tuple(lg)))
+
+    return {k: one(k, v) for k, v in batch_tree.items()}
+
+
+def _cache_shardings(mesh, arch: Arch, B: int, cache_shapes):
+    """Per-model cache logical axes (see each module's cache_logical_axes)."""
+    logical = arch.module.cache_logical_axes(arch.cfg, B)
+
+    def one(sds, lg):
+        return NamedSharding(mesh, spec_for(tuple(sds.shape), tuple(lg)))
+
+    return jax.tree.map(one, cache_shapes, logical)
+
+
+def dryrun_target(arch_name: str, shape_name: str, mesh, cfg_override: ModelConfig | None = None):
+    """Build (jitted_fn, arg_specs) for one cell under the given mesh.
+
+    kinds: train → train_step (fwd+bwd+adamw); prefill → prefill;
+    decode → serve_step (decode_step with abstract cache).
+
+    mesh=None builds an unsharded target (used by the FLOPs pass, which
+    lowers with unrolled scans and never compiles)."""
+    arch = get(arch_name)
+    if cfg_override is not None:
+        arch = Arch(cfg=cfg_override, module=arch.module)
+    cfg = arch.cfg
+    shape = SHAPES[shape_name]
+    rules = None
+    if mesh is not None and cfg.sharding_profile == "pure_dp":
+        rules = pure_dp_rules(mesh)
+
+    with axis_rules(mesh, rules):
+        params_shapes = _abstract_params(arch)
+        sharded = mesh is not None
+        p_specs = _specs_tree(mesh, params_shapes, arch.logical_axes()) if sharded else None
+
+        if shape.kind == "train":
+            opt_shapes = jax.eval_shape(lambda: init_opt_state(params_shapes))
+            batch = batch_specs(cfg, shape, "train")
+            fn = make_train_step(arch)
+            if sharded:
+                o_specs = {"m": p_specs, "v": p_specs, "step": NamedSharding(mesh, P())}
+                b_specs = _batch_shardings(mesh, cfg, batch)
+                jfn = jax.jit(
+                    fn,
+                    in_shardings=(p_specs, o_specs, b_specs),
+                    out_shardings=(p_specs, o_specs, None),
+                    donate_argnums=(0, 1),
+                )
+            else:
+                jfn = jax.jit(fn)
+            return jfn, (params_shapes, opt_shapes, batch)
+
+        if shape.kind == "prefill":
+            batch = batch_specs(cfg, shape, "prefill")
+
+            def prefill_fn(params, batch):
+                return arch.module.prefill(params, cfg, batch, max_seq=shape.seq)
+
+            if sharded:
+                b_specs = _batch_shardings(mesh, cfg, batch)
+                jfn = jax.jit(prefill_fn, in_shardings=(p_specs, b_specs))
+            else:
+                jfn = jax.jit(prefill_fn)
+            return jfn, (params_shapes, batch)
+
+        # decode: one new token against a seq-length cache.
+        B = shape.batch
+        cache_shapes = jax.eval_shape(lambda: arch.init_cache(B, shape.seq))
+        token = _sds((B, 1), jnp.int32)
+
+        def serve_step(params, token, cache):
+            return arch.decode_step(params, token, cache)
+
+        if sharded:
+            c_specs = _cache_shardings(mesh, arch, B, cache_shapes)
+            t_spec = NamedSharding(mesh, spec_for((B, 1), ("batch", None)))
+            jfn = jax.jit(
+                serve_step,
+                in_shardings=(p_specs, t_spec, c_specs),
+                out_shardings=(None, c_specs),
+                donate_argnums=(2,),
+            )
+        else:
+            jfn = jax.jit(serve_step)
+        return jfn, (params_shapes, token, cache_shapes)
+
+
+def flops_pass_cfg(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    """Config for the FLOPs lowering: scans unrolled; full-attention chunks
+    enlarged (rectangular-chunk FLOPs are chunk-size invariant, so this only
+    shrinks the unrolled HLO); windowed/banded attention keeps its real chunk
+    sizes (band FLOPs DO depend on them)."""
+    import dataclasses as _dc
+
+    kw = dict(scan_unroll=True)
+    if not (cfg.sliding_window or cfg.local_global_period):
+        kw["attn_q_chunk"] = min(shape.seq, 4096)
+        kw["attn_kv_chunk"] = min(shape.seq, 4096)
+    return _dc.replace(cfg, **kw)
+
+
+def slstm_flops_correction(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """xLSTM sLSTM layers run a sequential per-token scan that is NOT
+    unrolled in the FLOPs pass (4096-step bodies would explode the HLO).
+    The scan body is counted once by cost_analysis; add the missing
+    (S−1) iterations of the recurrent matmul h@R: 2·B·d·4d flops each,
+    ×4 for train (fwd + full-remat recompute + ~2× bwd)."""
+    if cfg.family != "ssm" or cfg.slstm_every <= 0:
+        return 0.0
+    n_slstm = sum(
+        1 for i in range(cfg.n_layers) if (i + 1) % cfg.slstm_every == 0
+    )
+    if shape.kind == "decode":
+        return 0.0  # decode is a single step; nothing missing
+    per_step = 2.0 * shape.batch * cfg.d_model * 4 * cfg.d_model
+    mult = 4.0 if shape.kind == "train" else 1.0
+    return n_slstm * (shape.seq - 1) * per_step * mult

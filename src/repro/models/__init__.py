@@ -1,0 +1,14 @@
+from repro.models.config import SHAPES, ModelConfig, ShapeSpec, cell_is_runnable
+from repro.models.registry import Arch, arch_names, get, make_batch, runnable_cells
+
+__all__ = [
+    "ModelConfig",
+    "ShapeSpec",
+    "SHAPES",
+    "cell_is_runnable",
+    "Arch",
+    "get",
+    "arch_names",
+    "make_batch",
+    "runnable_cells",
+]

@@ -1,0 +1,216 @@
+"""Encoder-decoder model (whisper-base backbone).
+
+The audio conv frontend is a STUB per the task spec: ``input_specs`` feeds
+precomputed frame embeddings (B, encoder_seq, d_model). Encoder blocks are
+bidirectional; decoder blocks are causal self-attn + cross-attn + MLP.
+Layer counts are small (6+6) so layers run as a Python loop over per-layer
+params (no scan needed)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as ly
+from repro.models.config import ModelConfig
+from repro.models.lm import chunked_ce_loss
+from repro.models.sharding import constrain
+
+
+def _init_enc_block(rng, cfg: ModelConfig):
+    ks = jax.random.split(rng, 2)
+    return {
+        "ln1": ly.init_rmsnorm(cfg.d_model, ly.dt(cfg)),
+        "attn": ly.init_attention(ks[0], cfg),
+        "ln2": ly.init_rmsnorm(cfg.d_model, ly.dt(cfg)),
+        "mlp": ly.init_mlp(ks[1], cfg),
+    }
+
+
+def _init_dec_block(rng, cfg: ModelConfig):
+    ks = jax.random.split(rng, 3)
+    return {
+        "ln1": ly.init_rmsnorm(cfg.d_model, ly.dt(cfg)),
+        "self_attn": ly.init_attention(ks[0], cfg),
+        "ln_x": ly.init_rmsnorm(cfg.d_model, ly.dt(cfg)),
+        "cross_attn": ly.init_attention(ks[1], cfg),
+        "ln2": ly.init_rmsnorm(cfg.d_model, ly.dt(cfg)),
+        "mlp": ly.init_mlp(ks[2], cfg),
+    }
+
+
+def init(rng, cfg: ModelConfig):
+    k_emb, k_enc, k_dec = jax.random.split(rng, 3)
+    enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_layers)
+    return {
+        "embedding": ly.init_embedding(k_emb, cfg),
+        "encoder": [_init_enc_block(k, cfg) for k in enc_keys],
+        "decoder": [_init_dec_block(k, cfg) for k in dec_keys],
+        "ln_enc": ly.init_rmsnorm(cfg.d_model, ly.dt(cfg)),
+        "ln_f": ly.init_rmsnorm(cfg.d_model, ly.dt(cfg)),
+    }
+
+
+def logical_axes(cfg: ModelConfig):
+    attn = ly.attention_logical_axes(cfg)
+    mlp = ly.mlp_logical_axes(cfg)
+    norm = {"scale": (None,)}
+    enc = {"ln1": norm, "attn": attn, "ln2": norm, "mlp": mlp}
+    dec = {
+        "ln1": norm, "self_attn": attn, "ln_x": norm,
+        "cross_attn": attn, "ln2": norm, "mlp": mlp,
+    }
+    return {
+        "embedding": ly.embedding_logical_axes(cfg),
+        "encoder": [enc for _ in range(cfg.encoder_layers)],
+        "decoder": [dec for _ in range(cfg.n_layers)],
+        "ln_enc": norm,
+        "ln_f": norm,
+    }
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, T, d) stub embeddings → encoder memory (B, T, d)."""
+    x = frames.astype(ly.dt(cfg))
+    x = constrain(x, "batch", None, None)
+    for blk in params["encoder"]:
+        h = ly.rmsnorm(blk["ln1"], x)
+        x = x + ly.attention(blk["attn"], cfg, h, causal=False)
+        h = ly.rmsnorm(blk["ln2"], x)
+        x = x + ly.mlp(blk["mlp"], cfg, h)
+    return ly.rmsnorm(params["ln_enc"], x)
+
+
+def _decoder_stack(params, cfg: ModelConfig, x, memory):
+    B, S, _ = x.shape
+    mem_pos = jnp.arange(memory.shape[1])[None, :].astype(jnp.int32)
+    for blk in params["decoder"]:
+        h = ly.rmsnorm(blk["ln1"], x)
+        x = x + ly.attention(blk["self_attn"], cfg, h, causal=True)
+        h = ly.rmsnorm(blk["ln_x"], x)
+        mk, mv = _cross_kv(blk["cross_attn"], cfg, memory, mem_pos)
+        x = x + ly.attention(blk["cross_attn"], cfg, h, causal=False, kv_override=(mk, mv))
+        h = ly.rmsnorm(blk["ln2"], x)
+        x = x + ly.mlp(blk["mlp"], cfg, h)
+        x = constrain(x, "batch", "seq_sp", None)
+    return ly.rmsnorm(params["ln_f"], x)
+
+
+def _cross_kv(attn_params, cfg: ModelConfig, memory, mem_pos):
+    B, T, _ = memory.shape
+    hd = cfg.hd
+    k = (memory @ attn_params["wk"])
+    v = (memory @ attn_params["wv"])
+    if cfg.qkv_bias:
+        k = k + attn_params["bk"]
+        v = v + attn_params["bv"]
+    k = ly.rope(k.reshape(B, T, cfg.n_kv_heads, hd), mem_pos, cfg.rope_theta)
+    v = v.reshape(B, T, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def train_loss(params, cfg: ModelConfig, batch) -> jax.Array:
+    memory = encode(params, cfg, batch["frames"])
+    x = ly.embed(params["embedding"], cfg, batch["tokens"])
+    x = _decoder_stack(params, cfg, x, memory)
+    return chunked_ce_loss(params, cfg, x, batch["labels"])
+
+
+# -- serving ----------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, B: int, max_seq: int):
+    L, Hkv, hd, T = cfg.n_layers, cfg.n_kv_heads, cfg.hd, cfg.encoder_seq
+    return {
+        "k": jnp.zeros((L, B, max_seq, Hkv, hd), ly.dt(cfg)),
+        "v": jnp.zeros((L, B, max_seq, Hkv, hd), ly.dt(cfg)),
+        "slot_pos": jnp.full((L, max_seq), -(2**30), jnp.int32),
+        "cross_k": jnp.zeros((L, B, T, Hkv, hd), ly.dt(cfg)),
+        "cross_v": jnp.zeros((L, B, T, Hkv, hd), ly.dt(cfg)),
+        "pos": jnp.int32(0),
+    }
+
+
+def prefill(params, cfg: ModelConfig, batch, max_seq: int | None = None):
+    """Encode frames, run prompt tokens, prime self- and cross-caches."""
+    memory = encode(params, cfg, batch["frames"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    x = ly.embed(params["embedding"], cfg, tokens)
+    mem_pos = jnp.arange(memory.shape[1])[None, :].astype(jnp.int32)
+    positions = jnp.arange(S)[None, :].astype(jnp.int32)
+    cks, cvs, sps, xks, xvs = [], [], [], [], []
+    for blk in params["decoder"]:
+        h = ly.rmsnorm(blk["ln1"], x)
+        q, k, v = ly._project_qkv(blk["self_attn"], cfg, h, positions)
+        attn = ly.chunked_attention(cfg, q, k, v, causal=True, window=None, softcap=None)
+        x = x + attn.reshape(B, S, -1) @ blk["self_attn"]["wo"]
+        ck, cv, sp = ly.fill_cache_from_prefill(k, v, max_seq)
+        cks.append(ck), cvs.append(cv), sps.append(sp)
+        h = ly.rmsnorm(blk["ln_x"], x)
+        mk, mv = _cross_kv(blk["cross_attn"], cfg, memory, mem_pos)
+        xks.append(mk), xvs.append(mv)
+        x = x + ly.attention(blk["cross_attn"], cfg, h, causal=False, kv_override=(mk, mv))
+        h = ly.rmsnorm(blk["ln2"], x)
+        x = x + ly.mlp(blk["mlp"], cfg, h)
+    x = ly.rmsnorm(params["ln_f"], x)
+    last = ly.logits(params["embedding"], cfg, x[:, -1:])
+    cache = {
+        "k": jnp.stack(cks), "v": jnp.stack(cvs), "slot_pos": jnp.stack(sps),
+        "cross_k": jnp.stack(xks), "cross_v": jnp.stack(xvs), "pos": jnp.int32(S),
+    }
+    return last, cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache):
+    x = ly.embed(params["embedding"], cfg, token)
+    pos = cache["pos"]
+    ck_out, cv_out, sp_out = [], [], []
+    for li, blk in enumerate(params["decoder"]):
+        h = ly.rmsnorm(blk["ln1"], x)
+        out, ck, cv, sp = ly.decode_attention(
+            blk["self_attn"], cfg, h, cache["k"][li], cache["v"][li],
+            cache["slot_pos"][li], pos,
+        )
+        ck_out.append(ck), cv_out.append(cv), sp_out.append(sp)
+        x = x + out
+        h = ly.rmsnorm(blk["ln_x"], x)
+        B = x.shape[0]
+        hd = cfg.hd
+        q = (h @ blk["cross_attn"]["wq"])
+        if cfg.qkv_bias:
+            q = q + blk["cross_attn"]["bq"]
+        q = q.reshape(B, 1, cfg.n_heads, hd)
+        q = ly.rope(q, jnp.zeros((B, 1), jnp.int32), cfg.rope_theta)
+        mk, mv = cache["cross_k"][li], cache["cross_v"][li]
+        G = cfg.q_per_kv
+        qh = q.reshape(B, 1, cfg.n_kv_heads, G, hd)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qh, mk, preferred_element_type=jnp.float32)
+        p = jax.nn.softmax(s / (hd ** 0.5), axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(mv.dtype), mv)
+        x = x + o.reshape(B, 1, -1) @ blk["cross_attn"]["wo"]
+        h = ly.rmsnorm(blk["ln2"], x)
+        x = x + ly.mlp(blk["mlp"], cfg, h)
+    x = ly.rmsnorm(params["ln_f"], x)
+    lg = ly.logits(params["embedding"], cfg, x)
+    new_cache = dict(cache)
+    new_cache.update(
+        k=jnp.stack(ck_out), v=jnp.stack(cv_out), slot_pos=jnp.stack(sp_out), pos=pos + 1
+    )
+    return lg, new_cache
+
+
+def cache_logical_axes(cfg: ModelConfig, B: int):
+    if B == 1:
+        kv = (None, None, "kv_seq", None, None)
+    elif cfg.decode_cache_seq_shard:
+        kv = (None, "batch", "kv_seq", None, None)
+    else:
+        kv = (None, "batch", None, "kv_heads", None)
+    xkv = (None, "batch", None, "kv_heads", None)
+    return {
+        "k": kv, "v": kv, "slot_pos": (None, None),
+        "cross_k": xkv, "cross_v": xkv, "pos": (),
+    }

@@ -1,0 +1,328 @@
+"""Decoder-only LM covering the dense / moe / vlm families.
+
+Layer stack runs as ``lax.scan`` over stacked per-layer params with
+``jax.checkpoint`` (remat) on the block body — compact HLO for the 40-cell
+dry-run and bounded activation memory. Per-layer attention patterns
+(gemma2 local/global alternation) ride along the scan as flag arrays.
+
+Loss never materializes full (B, S, V) logits: the LM head + cross-entropy
+run in sequence chunks (critical for vocab=256k at 1M tokens).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as ly
+from repro.models import moe as moe_mod
+from repro.models.config import ModelConfig
+from repro.models.sharding import constrain
+
+AUX_LOSS_WEIGHT = 0.01
+LOSS_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _layer_windows(cfg: ModelConfig) -> list[int]:
+    """Per-layer attention window (0 = full causal)."""
+    out = []
+    for i in range(cfg.n_layers):
+        if cfg.sliding_window is not None:
+            out.append(cfg.sliding_window)
+        elif cfg.local_global_period and i % cfg.local_global_period == 0:
+            out.append(cfg.local_window)
+        else:
+            out.append(0)
+    return out
+
+
+def init_block(rng, cfg: ModelConfig):
+    ks = jax.random.split(rng, 4)
+    p = {
+        "ln1": ly.init_rmsnorm(cfg.d_model, ly.dt(cfg)),
+        "attn": ly.init_attention(ks[0], cfg),
+        "ln2": ly.init_rmsnorm(cfg.d_model, ly.dt(cfg)),
+    }
+    if cfg.n_experts:
+        p["moe"] = moe_mod.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = ly.init_mlp(ks[2], cfg)
+    return p
+
+
+def block_logical_axes(cfg: ModelConfig):
+    p = {
+        "ln1": {"scale": (None,)},
+        "attn": ly.attention_logical_axes(cfg),
+        "ln2": {"scale": (None,)},
+    }
+    if cfg.n_experts:
+        p["moe"] = moe_mod.moe_logical_axes(cfg)
+    else:
+        p["mlp"] = ly.mlp_logical_axes(cfg)
+    return p
+
+
+def init(rng, cfg: ModelConfig):
+    k_emb, k_layers, k_vis = jax.random.split(rng, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_block(k, cfg))(layer_keys)
+    params = {
+        "embedding": ly.init_embedding(k_emb, cfg),
+        "layers": stacked,
+        "ln_f": ly.init_rmsnorm(cfg.d_model, ly.dt(cfg)),
+    }
+    if cfg.family == "vlm":
+        params["vision_proj"] = ly.init_dense(k_vis, cfg.d_model, cfg.d_model, ly.dt(cfg))
+    return params
+
+
+def logical_axes(cfg: ModelConfig):
+    """Pytree of logical-axis tuples matching init(); stacked layers get a
+    leading None (layer axis unsharded)."""
+    blk = block_logical_axes(cfg)
+    stacked = jax.tree.map(lambda axes: (None, *axes), blk,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    p = {
+        "embedding": ly.embedding_logical_axes(cfg),
+        "layers": stacked,
+        "ln_f": {"scale": (None,)},
+    }
+    if cfg.family == "vlm":
+        p["vision_proj"] = ("embed", None)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    if cfg.remat_policy == "full":
+        return jax.checkpoint_policies.everything_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _block_apply(cfg: ModelConfig, p, x, window):
+    """One transformer block. window: traced int32 scalar (0 = full)."""
+    h = ly.rmsnorm(p["ln1"], x)
+    # Window is a per-layer static-pattern flag; lax.cond keeps one compiled
+    # body per branch (local vs global) inside the scan.
+    if cfg.sliding_window is not None:
+        attn_out = ly.attention(p["attn"], cfg, h, causal=True, window=cfg.sliding_window)
+    elif cfg.local_global_period:
+        attn_out = jax.lax.cond(
+            window > 0,
+            lambda hh: ly.attention(p["attn"], cfg, hh, causal=True, window=cfg.local_window),
+            lambda hh: ly.attention(p["attn"], cfg, hh, causal=True, window=None),
+            h,
+        )
+    else:
+        attn_out = ly.attention(p["attn"], cfg, h, causal=True, window=None)
+    x = x + attn_out
+    x = constrain(x, "batch", "seq_sp", None)
+    h = ly.rmsnorm(p["ln2"], x)
+    if cfg.n_experts:
+        mlp_out, aux = moe_mod.moe_mlp(p["moe"], cfg, h)
+    else:
+        mlp_out, aux = ly.mlp(p["mlp"], cfg, h), jnp.float32(0.0)
+    x = x + mlp_out
+    x = constrain(x, "batch", "seq_sp", None)
+    return x, aux
+
+
+def backbone(params, cfg: ModelConfig, x):
+    """(B, S, d) → (B, S, d) through the scanned layer stack."""
+    windows = jnp.asarray(_layer_windows(cfg), jnp.int32)
+    block = functools.partial(_block_apply, cfg)
+    block = jax.checkpoint(block, policy=_remat_policy(cfg))
+
+    def body(carry, inp):
+        x, aux_sum = carry
+        p, w = inp
+        x, aux = block(p, x, w)
+        return (x, aux_sum + aux), None
+
+    (x, aux_sum), _ = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), (params["layers"], windows), unroll=cfg.scan_unroll
+    )
+    return ly.rmsnorm(params["ln_f"], x), aux_sum
+
+
+def _inputs_to_embeddings(params, cfg: ModelConfig, batch):
+    """tokens (+ patch embeddings for vlm) → (B, S_total, d)."""
+    x = ly.embed(params["embedding"], cfg, batch["tokens"])
+    if cfg.family == "vlm":
+        vis = batch["patches"].astype(ly.dt(cfg)) @ params["vision_proj"]
+        x = jnp.concatenate([vis, x], axis=1)
+    return constrain(x, "batch", "seq_sp", None)
+
+
+def chunked_ce_loss(params, cfg: ModelConfig, x, labels):
+    """Scan the LM head + CE over sequence chunks; returns mean CE."""
+    B, S, d = x.shape
+    c = min(LOSS_CHUNK, S)
+    assert S % c == 0
+    nc = S // c
+    xs = x.reshape(B, nc, c, d).swapaxes(0, 1)
+    lbl = labels.reshape(B, nc, c).swapaxes(0, 1)
+
+    def body(tot, inp):
+        xc, lc = inp
+        lg = ly.logits(params["embedding"], cfg, xc)  # (B, c, V) fp32
+        lse = jax.scipy.special.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, lc[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(lse - gold), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    tot, _ = jax.lax.scan(body, jnp.float32(0.0), (xs, lbl), unroll=cfg.scan_unroll)
+    return tot / (B * S)
+
+
+def train_loss(params, cfg: ModelConfig, batch) -> jax.Array:
+    """CE against pre-aligned next-token labels (+ MoE aux). Loss covers
+    token positions only (vlm: the patch prefix is excluded)."""
+    x = _inputs_to_embeddings(params, cfg, batch)
+    x, aux = backbone(params, cfg, x)
+    S_text = batch["tokens"].shape[1]
+    x_text = x[:, -S_text:]
+    loss = chunked_ce_loss(params, cfg, x_text, batch["labels"])
+    return loss + AUX_LOSS_WEIGHT * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def cache_len(cfg: ModelConfig, max_seq: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(max_seq, cfg.sliding_window)
+    return max_seq
+
+
+def init_cache(cfg: ModelConfig, B: int, max_seq: int):
+    Smax = cache_len(cfg, max_seq)
+    L, Hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((L, B, Smax, Hkv, hd), ly.dt(cfg)),
+        "v": jnp.zeros((L, B, Smax, Hkv, hd), ly.dt(cfg)),
+        "slot_pos": jnp.full((L, Smax), -(2**30), jnp.int32),
+        "pos": jnp.int32(0),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, token, cache):
+    """token: (B, 1) int32 → (logits (B, 1, V) fp32, new cache)."""
+    x = ly.embed(params["embedding"], cfg, token)
+    windows = jnp.asarray(_layer_windows(cfg), jnp.int32)
+    pos = cache["pos"]
+
+    def body(x, inp):
+        p, ck, cv, sp, w = inp
+        h = ly.rmsnorm(p["ln1"], x)
+        window = cfg.sliding_window
+        if cfg.local_global_period:
+            # decode: window flag folded into slot_pos masking via w.
+            window = None
+        out, ck, cv, sp = ly.decode_attention(
+            p["attn"], cfg, h, ck, cv, sp, pos, window=window
+        )
+        if cfg.local_global_period:
+            # local layers additionally mask to the window.
+            out_local, ck2, cv2, sp2 = ly.decode_attention(
+                p["attn"], cfg, h, ck, cv, sp, pos, window=cfg.local_window
+            )
+            is_local = w > 0
+            out = jnp.where(is_local, out_local, out)
+        x = x + out
+        h = ly.rmsnorm(p["ln2"], x)
+        if cfg.n_experts:
+            mlp_out, _ = moe_mod.moe_mlp(p["moe"], cfg, h)
+        else:
+            mlp_out = ly.mlp(p["mlp"], cfg, h)
+        return x + mlp_out, (ck, cv, sp)
+
+    x, (ck, cv, sp) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"], cache["slot_pos"], windows),
+        unroll=cfg.scan_unroll,
+    )
+    x = ly.rmsnorm(params["ln_f"], x)
+    lg = ly.logits(params["embedding"], cfg, x)
+    new_cache = {"k": ck, "v": cv, "slot_pos": sp, "pos": pos + 1}
+    return lg, new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch, max_seq: int | None = None):
+    """Run the full prompt, return (last-token logits, primed cache)."""
+    x = _inputs_to_embeddings(params, cfg, batch)
+    B, S, _ = x.shape
+    max_seq = max_seq or S
+    Smax = cache_len(cfg, max_seq)
+    windows = jnp.asarray(_layer_windows(cfg), jnp.int32)
+
+    def body(carry, inp):
+        x, = carry
+        p, w = inp
+        h = ly.rmsnorm(p["ln1"], x)
+        positions = jnp.arange(S)[None, :].astype(jnp.int32)
+        q, k, v = ly._project_qkv(p["attn"], cfg, h, positions)
+        if cfg.sliding_window is not None:
+            window = cfg.sliding_window
+        elif cfg.local_global_period:
+            window = None  # global path; local layers masked below via cond
+        else:
+            window = None
+        attn = ly.chunked_attention(
+            cfg, q, k, v, causal=True, window=window, softcap=cfg.attn_softcap
+        )
+        if cfg.local_global_period:
+            attn_local = ly.chunked_attention(
+                cfg, q, k, v, causal=True, window=cfg.local_window, softcap=cfg.attn_softcap
+            )
+            attn = jnp.where(w > 0, attn_local, attn)
+        out = attn.reshape(B, S, cfg.n_heads * cfg.hd) @ p["attn"]["wo"]
+        x = x + out
+        x = constrain(x, "batch", "seq_sp", None)
+        h = ly.rmsnorm(p["ln2"], x)
+        if cfg.n_experts:
+            mlp_out, _ = moe_mod.moe_mlp(p["moe"], cfg, h)
+        else:
+            mlp_out = ly.mlp(p["mlp"], cfg, h)
+        x = x + mlp_out
+        x = constrain(x, "batch", "seq_sp", None)
+        ck, cv, sp = ly.fill_cache_from_prefill(k, v, Smax)
+        return (x,), (ck, cv, sp)
+
+    body = jax.checkpoint(body, policy=_remat_policy(cfg))
+    (x,), (ck, cv, sp) = jax.lax.scan(
+        body, (x,), (params["layers"], windows), unroll=cfg.scan_unroll
+    )
+    x = ly.rmsnorm(params["ln_f"], x)
+    last = ly.logits(params["embedding"], cfg, x[:, -1:])
+    cache = {"k": ck, "v": cv, "slot_pos": sp, "pos": jnp.int32(S)}
+    return last, cache
+
+
+def cache_logical_axes(cfg: ModelConfig, B: int):
+    """Logical axes matching init_cache's structure. B==1 (long-context)
+    shards the cache sequence over 'model'; otherwise batch+kv-heads."""
+    if B == 1:  # long-context: shard the cache sequence, not heads
+        kv = (None, None, "kv_seq", None, None)
+    elif cfg.decode_cache_seq_shard:
+        # §Perf: batch × sequence sharding = full 256-way cache split
+        # (kv_heads rarely divide the model axis; the sequence always does).
+        kv = (None, "batch", "kv_seq", None, None)
+    else:
+        kv = (None, "batch", None, "kv_heads", None)
+    return {"k": kv, "v": kv, "slot_pos": (None, None), "pos": ()}

@@ -1,0 +1,104 @@
+"""Architecture registry: uniform API over all model families.
+
+Every entry exposes:
+  init(rng, cfg), train_loss(params, cfg, batch),
+  prefill(params, cfg, batch, max_seq), decode_step(params, cfg, token, cache),
+  init_cache(cfg, B, max_seq), logical_axes(cfg)
+plus batch builders for tests/examples and ShapeDtypeStruct specs for the
+dry-run (see repro.launch.specs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import encdec, hybrid, lm, xlstm
+from repro.models.config import SHAPES, ModelConfig, ShapeSpec, cell_is_runnable
+
+_FAMILY_MODULES = {
+    "dense": lm,
+    "moe": lm,
+    "vlm": lm,
+    "encdec": encdec,
+    "ssm": xlstm,
+    "hybrid": hybrid,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    cfg: ModelConfig
+    module: types.ModuleType
+
+    @property
+    def name(self) -> str:
+        return self.cfg.name
+
+    def init(self, rng):
+        return self.module.init(rng, self.cfg)
+
+    def train_loss(self, params, batch):
+        return self.module.train_loss(params, self.cfg, batch)
+
+    def prefill(self, params, batch, max_seq=None):
+        return self.module.prefill(params, self.cfg, batch, max_seq)
+
+    def decode_step(self, params, token, cache):
+        return self.module.decode_step(params, self.cfg, token, cache)
+
+    def init_cache(self, B, max_seq):
+        return self.module.init_cache(self.cfg, B, max_seq)
+
+    def logical_axes(self):
+        return self.module.logical_axes(self.cfg)
+
+
+def _configs(smoke: bool):
+    # Imported lazily: repro.configs modules import repro.models.config,
+    # which would otherwise make this a circular import.
+    from repro.configs import ALL_CONFIGS, SMOKE_CONFIGS
+
+    return SMOKE_CONFIGS if smoke else ALL_CONFIGS
+
+
+def get(name: str, smoke: bool = False) -> Arch:
+    cfgs = _configs(smoke)
+    if name not in cfgs:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(cfgs)}")
+    cfg = cfgs[name]
+    return Arch(cfg=cfg, module=_FAMILY_MODULES[cfg.family])
+
+
+def arch_names() -> list[str]:
+    return list(_configs(False))
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeSpec, rng: np.random.Generator | None = None):
+    """Concrete batch (numpy → jnp) for train/prefill; tokens/labels/extras."""
+    rng = rng or np.random.default_rng(0)
+    B, S = shape.batch, shape.seq
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, size=(B, S)), jnp.int32),
+    }
+    if shape.kind == "train":
+        batch["labels"] = jnp.asarray(rng.integers(0, cfg.vocab, size=(B, S)), jnp.int32)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encoder_seq, cfg.d_model)), jnp.float32
+        )
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.vision_patches, cfg.d_model)), jnp.float32
+        )
+    return batch
+
+
+def runnable_cells(arch: str) -> list[tuple[str, bool, str]]:
+    """[(shape_name, runnable, reason)] for the given architecture."""
+    cfg = _configs(False)[arch]
+    return [(s.name, *cell_is_runnable(cfg, s)) for s in SHAPES.values()]

@@ -1,0 +1,128 @@
+"""Logical-axis sharding: MaxText-style rules mapping logical tensor axes to
+mesh axes, with divisibility-aware fallback.
+
+Logical axes used across the models:
+  batch     — data-parallel batch            → ("pod", "data")
+  seq_sp    — sequence-parallel residual     → "model"   (Megatron-SP)
+  heads     — attention heads                → "model"
+  kv_heads  — KV heads                       → "model" (if divisible)
+  ff        — MLP hidden                     → "model"
+  vocab     — vocabulary                     → "model"
+  embed     — d_model on weights             → ("pod", "data")  (FSDP/ZeRO)
+  experts   — MoE experts                    → (unsharded; d_ff TP instead)
+  kv_seq    — KV-cache sequence              → "model" (long-context decode)
+
+``with axis_rules(mesh, rules): ...`` activates constraint emission; without
+an active context (CPU unit tests) every constraint is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def default_rules(mesh: Mesh) -> dict[str, tuple[str, ...]]:
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    model = ("model",) if "model" in mesh.axis_names else ()
+    return {
+        "batch": data_axes,
+        "seq_sp": model,
+        "heads": model,
+        "kv_heads": model,
+        "ff": model,
+        "vocab": model,
+        "embed": data_axes,
+        "experts": (),
+        "kv_seq": model,
+        "state": (),
+    }
+
+
+def pure_dp_rules(mesh: Mesh) -> dict[str, tuple[str, ...]]:
+    """§Perf profile for small models: no tensor parallelism at all — batch
+    over (data, model), params fully replicated, grads all-reduced once.
+    Removes every per-layer activation collective (see EXPERIMENTS.md §Perf,
+    qwen hillclimb)."""
+    axes = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+    return {
+        "batch": axes,
+        "seq_sp": (), "heads": (), "kv_heads": (), "ff": (),
+        "vocab": (), "embed": (), "experts": (), "kv_seq": (), "state": (),
+    }
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh | None, rules: dict[str, tuple[str, ...]] | None = None):
+    prev = getattr(_STATE, "ctx", None)
+    if mesh is None:
+        _STATE.ctx = None
+    else:
+        _STATE.ctx = (mesh, rules or default_rules(mesh))
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def active_mesh() -> Mesh | None:
+    ctx = getattr(_STATE, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def _axes_for(logical: str | None) -> tuple[str, ...]:
+    ctx = getattr(_STATE, "ctx", None)
+    if ctx is None or logical is None:
+        return ()
+    return ctx[1].get(logical, ())
+
+
+def spec_for(shape: tuple[int, ...], logical_axes: tuple[str | None, ...]) -> P:
+    """PartitionSpec for a shape, dropping axes that don't divide evenly."""
+    ctx = getattr(_STATE, "ctx", None)
+    if ctx is None:
+        return P()
+    mesh = ctx[0]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, logical in zip(shape, logical_axes):
+        axes = _axes_for(logical)
+        prod = int(np.prod([sizes[a] for a in axes])) if axes else 1
+        if axes and dim % prod == 0 and prod > 1:
+            out.append(axes if len(axes) > 1 else axes[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """with_sharding_constraint against the active rules (no-op if none)."""
+    ctx = getattr(_STATE, "ctx", None)
+    if ctx is None:
+        return x
+    mesh = ctx[0]
+    spec = spec_for(x.shape, logical_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(shape: tuple[int, ...], logical_axes: tuple[str | None, ...]) -> NamedSharding | None:
+    ctx = getattr(_STATE, "ctx", None)
+    if ctx is None:
+        return None
+    return NamedSharding(ctx[0], spec_for(shape, logical_axes))
+
+
+def tree_specs(tree_shapes, tree_logical) -> object:
+    """Map matching pytrees of shapes & logical-axis tuples to PartitionSpecs."""
+    return jax.tree.map(
+        lambda sh, lg: spec_for(tuple(sh), tuple(lg)),
+        tree_shapes,
+        tree_logical,
+        is_leaf=lambda x: isinstance(x, (tuple, list)) and (not x or not isinstance(x[0], (tuple, list, dict))),
+    )

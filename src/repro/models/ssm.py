@@ -1,0 +1,420 @@
+"""Recurrent sequence blocks: mLSTM / sLSTM (xLSTM) and Mamba2 (SSD).
+
+All parallel-form blocks share one primitive — a chunked linear recurrence
+(scalar per-(head, t) decay, rank-1 state updates):
+
+    S_t = a_t · S_{t-1} + i_t · k_t v_tᵀ          (state: (dk, dv))
+    n_t = a_t · n_{t-1} + i_t · k_t               (optional normalizer)
+    y_t = qₜᵀ S_t   [ / max(|qₜᵀ n_t|, 1) ]
+
+computed chunk-parallel: intra-chunk via a (c × c) decay-masked attention
+matrix, inter-chunk via a lax.scan carrying (S, n). Decays are kept in log
+space and clamped ≤ 0, so every exp() is ≤ 1 — numerically safe without the
+xLSTM max-stabilizer (documented simplification vs. the paper's exact
+formulation; equivalent to Gated Linear Attention form).
+
+Decode-time forms are the exact O(1) recurrences.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dt, init_dense, use_weight
+from repro.models.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Chunked linear recurrence primitive
+# ---------------------------------------------------------------------------
+
+
+def chunk_linear_recurrence(
+    q: jax.Array,  # (B, S, H, dk)
+    k: jax.Array,  # (B, S, H, dk)
+    v: jax.Array,  # (B, S, H, dv)
+    log_a: jax.Array,  # (B, S, H) decay, ≤ 0
+    gate_i: jax.Array,  # (B, S, H) input gate, ≥ 0
+    *,
+    chunk: int,
+    init_state: tuple[jax.Array, jax.Array] | None = None,
+    normalize: bool = False,
+    unroll: bool = False,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Returns (y: (B,S,H,dv), final (S_state: (B,H,dk,dv), n: (B,H,dk)))."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, S)
+    S_real = S
+    if S % c != 0:
+        # Pad to a chunk multiple: decay 1 (log_a = 0) and gate 0 make the
+        # padded steps exact no-ops on the state; outputs are trimmed.
+        pad = c - S % c
+        padt = lambda a, val=0.0: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2),
+                                          constant_values=val)
+        q, k, v = padt(q), padt(k), padt(v)
+        log_a, gate_i = padt(log_a), padt(gate_i)
+        S = S + pad
+    nc = S // c
+
+    def resh(x):
+        return x.reshape(B, nc, c, *x.shape[2:]).swapaxes(0, 1)  # (nc, B, c, ...)
+
+    qs, ks, vs = resh(q), resh(k), resh(v)
+    las, gis = resh(log_a), resh(gate_i)
+
+    if init_state is None:
+        S0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+        n0 = jnp.zeros((B, H, dk), jnp.float32)
+    else:
+        S0, n0 = init_state
+
+    def per_chunk(carry, inp):
+        S_prev, n_prev = carry
+        qc_, kc_, vc_, la, gi = inp  # (B, c, H, ·)
+        cum = jnp.cumsum(la, axis=1)  # (B, c, H) inclusive log-decay products
+        # Intra-chunk decay mask D[t, s] = exp(cum_t − cum_s − la_s·0) i_s, s ≤ t.
+        # Using inclusive cumsum: decay from s to t (applying a_{s+1..t}) is
+        # exp(cum_t − cum_s).
+        d_ts = cum[:, :, None, :] - cum[:, None, :, :]  # (B, t, s, H)
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        D = jnp.where(tri[None, :, :, None], jnp.exp(d_ts), 0.0) * gi[:, None, :, :]
+        scores = jnp.einsum("bthd,bshd->btsh", qc_.astype(jnp.float32), kc_.astype(jnp.float32))
+        w = scores * D  # (B, t, s, H)
+        y_intra = jnp.einsum("btsh,bshv->bthv", w, vc_.astype(jnp.float32))
+        carry_decay = jnp.exp(cum)  # (B, c, H): decay from chunk start to t
+        y_inter = jnp.einsum(
+            "bthd,bhdv->bthv", (qc_.astype(jnp.float32) * carry_decay[..., None]), S_prev
+        )
+        y = y_intra + y_inter
+        if normalize:
+            n_intra = jnp.einsum("btsh,bshd->bthd", D, kc_.astype(jnp.float32))
+            n_t = n_intra + carry_decay[..., None] * n_prev[:, None]
+            denom = jnp.abs(jnp.einsum("bthd,bthd->bth", qc_.astype(jnp.float32), n_t))
+            y = y / jnp.maximum(denom, 1.0)[..., None]
+        else:
+            n_t = jnp.broadcast_to(n_prev[:, None], (B, c, H, dk))
+        # State update to chunk end.
+        total = cum[:, -1:, :]  # (B, 1, H)
+        rem = jnp.exp(total - cum) * gi  # (B, s, H): decay from s to chunk end
+        S_new = jnp.exp(total[:, 0])[..., None, None] * S_prev + jnp.einsum(
+            "bshd,bshv->bhdv", (kc_.astype(jnp.float32) * rem[..., None]), vc_.astype(jnp.float32)
+        )
+        n_new = jnp.exp(total[:, 0])[..., None] * n_prev + jnp.einsum(
+            "bshd,bsh->bhd", kc_.astype(jnp.float32), rem
+        )
+        return (S_new, n_new), y
+
+    (Sf, nf), ys = jax.lax.scan(
+        per_chunk, (S0, n0), (qs, ks, vs, las, gis), unroll=unroll
+    )
+    y = ys.swapaxes(0, 1).reshape(B, S, H, dv)[:, :S_real]
+    return y, (Sf, nf)
+
+
+def linear_recurrence_step(
+    q, k, v, log_a, gate_i, state, n_state, *, normalize: bool = False
+):
+    """Exact single-step decode. q/k: (B,H,dk), v: (B,H,dv), gates: (B,H)."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None]
+    state = a[..., None] * state + (gate_i.astype(jnp.float32)[..., None, None]) * (
+        k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    )
+    n_state = a * n_state + gate_i.astype(jnp.float32)[..., None] * k.astype(jnp.float32)
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), state)
+    if normalize:
+        denom = jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n_state))
+        y = y / jnp.maximum(denom, 1.0)[..., None]
+    return y, state, n_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    ks = jax.random.split(rng, 8)
+    return {
+        "w_up": init_dense(ks[0], d, di, dt(cfg)),
+        "w_qkv": init_dense(ks[1], di, 3 * di, dt(cfg)),
+        "w_if": init_dense(ks[2], di, 2 * cfg.n_heads, dt(cfg)),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((cfg.n_heads,)), 3.0 * jnp.ones((cfg.n_heads,))]
+        ).astype(dt(cfg)),
+        "w_og": init_dense(ks[3], d, di, dt(cfg)),
+        "w_down": init_dense(ks[4], di, d, dt(cfg)),
+    }
+
+
+def mlstm_logical_axes(cfg: ModelConfig):
+    return {
+        "w_up": ("embed", "ff"),
+        "w_qkv": ("ff", None),
+        "w_if": ("ff", None),
+        "b_if": (None,),
+        "w_og": ("embed", "ff"),
+        "w_down": ("ff", "embed"),
+    }
+
+
+def _mlstm_gates(params, cfg, h):
+    H = cfg.n_heads
+    gf = h @ params["w_if"] + params["b_if"]
+    i_t = jax.nn.sigmoid(gf[..., :H].astype(jnp.float32))
+    log_f = jax.nn.log_sigmoid(gf[..., H:].astype(jnp.float32))
+    return i_t, log_f
+
+
+def mlstm_block(params, cfg: ModelConfig, x, state=None):
+    """x: (B, S, d). Returns (y, new_state)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    di = cfg.ssm_expand * d
+    hd = di // H
+    h = x @ use_weight(cfg, params["w_up"], None, "ff")
+    qkv = h @ use_weight(cfg, params["w_qkv"], "ff", None)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, S, H, hd) / math.sqrt(hd)
+    k = k.reshape(B, S, H, hd)
+    v = v.reshape(B, S, H, hd)
+    i_t, log_f = _mlstm_gates(params, cfg, h)
+    y, new_state = chunk_linear_recurrence(
+        q, k, v, log_f, i_t, chunk=cfg.ssm_chunk,
+        init_state=state, normalize=True, unroll=cfg.scan_unroll,
+    )
+    og = jax.nn.sigmoid((x @ use_weight(cfg, params["w_og"], None, "ff")).astype(jnp.float32))
+    out = (y.reshape(B, S, di) * og).astype(x.dtype)
+    return out @ use_weight(cfg, params["w_down"], "ff", None), new_state
+
+
+def mlstm_decode_step(params, cfg: ModelConfig, x, state):
+    """x: (B, 1, d); state: (S_state, n_state)."""
+    B, _, d = x.shape
+    H = cfg.n_heads
+    di = cfg.ssm_expand * d
+    hd = di // H
+    h = (x @ params["w_up"])[:, 0]
+    qkv = h @ params["w_qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, H, hd) / math.sqrt(hd)
+    k = k.reshape(B, H, hd)
+    v = v.reshape(B, H, hd)
+    i_t, log_f = _mlstm_gates(params, cfg, h)
+    S_state, n_state = state
+    y, S_state, n_state = linear_recurrence_step(
+        q, k, v, log_f, i_t, S_state, n_state, normalize=True
+    )
+    og = jax.nn.sigmoid((x[:, 0] @ params["w_og"]).astype(jnp.float32))
+    out = (y.reshape(B, di) * og).astype(x.dtype) @ params["w_down"]
+    return out[:, None], (S_state, n_state)
+
+
+def mlstm_state_init(cfg: ModelConfig, B: int):
+    H = cfg.n_heads
+    hd = cfg.ssm_expand * cfg.d_model // H
+    return (
+        jnp.zeros((B, H, hd, hd), jnp.float32),
+        jnp.zeros((B, H, hd), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM) — sequential scalar-memory recurrence
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_x": init_dense(ks[0], d, 4 * d, dt(cfg)),  # z, i, f, o pre-acts
+        "r_h": init_dense(ks[1], d, 4 * d, dt(cfg), scale=1.0 / math.sqrt(d) * 0.5),
+        "b": jnp.zeros((4 * d,), dt(cfg)),
+        "w_down": init_dense(ks[2], d, d, dt(cfg)),
+    }
+
+
+def slstm_logical_axes(cfg: ModelConfig):
+    return {
+        "w_x": ("embed", None),
+        "r_h": ("embed", None),
+        "b": (None,),
+        "w_down": ("embed", None),
+    }
+
+
+def _slstm_cell(params, cfg, xw_t, st):
+    """One stabilized sLSTM step. xw_t: (B, 4d) precomputed x-projection."""
+    h, c, n, m = st
+    d = cfg.d_model
+    pre = xw_t + h @ params["r_h"] + params["b"]
+    z, it, ft, ot = jnp.split(pre.astype(jnp.float32), 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(ot)
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c = f_p * c + i_p * z
+    n = f_p * n + i_p
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return (h_new.astype(xw_t.dtype), c, n, m_new), h_new
+
+
+def slstm_block(params, cfg: ModelConfig, x, state=None):
+    B, S, d = x.shape
+    xw = x @ params["w_x"]  # (B, S, 4d)
+    st = state if state is not None else slstm_state_init(cfg, B)
+
+    def step(carry, xw_t):
+        return _slstm_cell(params, cfg, xw_t, carry)
+
+    st, hs = jax.lax.scan(step, st, xw.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)  # (B, S, d)
+    return y @ params["w_down"], st
+
+
+def slstm_decode_step(params, cfg: ModelConfig, x, state):
+    xw = (x @ params["w_x"])[:, 0]
+    st, h = _slstm_cell(params, cfg, xw, state)
+    return (h.astype(x.dtype) @ params["w_down"])[:, None], st
+
+
+def slstm_state_init(cfg: ModelConfig, B: int):
+    d = cfg.d_model
+    z = jnp.zeros((B, d), jnp.float32)
+    return (z.astype(jnp.dtype(cfg.dtype)), z, z, z - 30.0)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) block
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    H = cfg.n_heads
+    ks = jax.random.split(rng, 6)
+    return {
+        # joint projection: [x (di), z (di), B (H·N), C (H·N), dt (H)]
+        "w_in": init_dense(ks[0], d, 2 * di + 2 * H * N + H, dt(cfg)),
+        "conv": (jax.random.normal(ks[1], (cfg.ssm_conv, di + 2 * H * N), jnp.float32) * 0.1).astype(dt(cfg)),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = −exp(A_log) ≤ −1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "w_out": init_dense(ks[2], di, d, dt(cfg)),
+    }
+
+
+def mamba2_logical_axes(cfg: ModelConfig):
+    return {
+        "w_in": ("embed", "ff"),
+        "conv": (None, "ff"),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "w_out": ("ff", "embed"),
+    }
+
+
+def _mamba2_split(cfg: ModelConfig, proj):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N, H = cfg.ssm_state, cfg.n_heads
+    x_in = proj[..., :di]
+    z = proj[..., di : 2 * di]
+    Bv = proj[..., 2 * di : 2 * di + H * N]
+    Cv = proj[..., 2 * di + H * N : 2 * di + 2 * H * N]
+    dt_ = proj[..., 2 * di + 2 * H * N :]
+    return x_in, z, Bv, Cv, dt_
+
+
+def mamba2_block(params, cfg: ModelConfig, x, state=None):
+    """x: (B, S, d). state: (conv_buf (B, conv−1, dconv), S_state, n_dummy)."""
+    B, S, d = x.shape
+    di = cfg.ssm_expand * d
+    N, H = cfg.ssm_state, cfg.n_heads
+    P = di // H
+    proj = x @ use_weight(cfg, params["w_in"], None, "ff")
+    x_in, z, Bv, Cv, dt_ = _mamba2_split(cfg, proj)
+    # Causal depthwise conv over the (x, B, C) streams jointly.
+    xbc = jnp.concatenate([x_in, Bv, Cv], axis=-1)  # (B, S, dconv)
+    K = cfg.ssm_conv
+    if state is not None:
+        conv_buf = state[0]
+        xbc_pad = jnp.concatenate([conv_buf, xbc], axis=1)
+    else:
+        xbc_pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    conv_w = params["conv"]
+    xbc_conv = sum(
+        xbc_pad[:, i : i + S, :] * conv_w[i][None, None, :] for i in range(K)
+    )
+    xbc_conv = jax.nn.silu(xbc_conv.astype(jnp.float32)).astype(x.dtype)
+    x_c = xbc_conv[..., :di]
+    B_c = xbc_conv[..., di : di + H * N].reshape(B, S, H, N)
+    C_c = xbc_conv[..., di + H * N :].reshape(B, S, H, N)
+
+    dt_v = jax.nn.softplus(dt_.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])  # (H,)
+    log_a = dt_v * A[None, None, :]  # ≤ 0
+    v = x_c.reshape(B, S, H, P)
+    y, (S_new, n_new) = chunk_linear_recurrence(
+        C_c, B_c, v, log_a, dt_v, chunk=cfg.ssm_chunk,
+        init_state=None if state is None else (state[1], state[2]),
+        normalize=False, unroll=cfg.scan_unroll,
+    )
+    y = y + v.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = (y.reshape(B, S, di) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    new_conv_buf = xbc[:, S - (K - 1) :, :] if S >= K - 1 else None
+    return y @ use_weight(cfg, params["w_out"], "ff", None), (new_conv_buf, S_new, n_new)
+
+
+def mamba2_decode_step(params, cfg: ModelConfig, x, state):
+    B = x.shape[0]
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N, H = cfg.ssm_state, cfg.n_heads
+    P = di // H
+    K = cfg.ssm_conv
+    conv_buf, S_state, n_state = state
+    proj = (x @ params["w_in"])[:, 0]
+    x_in, z, Bv, Cv, dt_ = _mamba2_split(cfg, proj)
+    xbc = jnp.concatenate([x_in, Bv, Cv], axis=-1)[:, None, :]  # (B,1,dconv)
+    window = jnp.concatenate([conv_buf, xbc], axis=1)  # (B, K, dconv)
+    conv_w = params["conv"]
+    xbc_conv = jnp.einsum("bkc,kc->bc", window, conv_w)
+    xbc_conv = jax.nn.silu(xbc_conv.astype(jnp.float32)).astype(x.dtype)
+    x_c = xbc_conv[..., :di]
+    B_c = xbc_conv[..., di : di + H * N].reshape(B, H, N)
+    C_c = xbc_conv[..., di + H * N :].reshape(B, H, N)
+    dt_v = jax.nn.softplus(dt_.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    log_a = dt_v * A[None, :]
+    v = x_c.reshape(B, H, P)
+    y, S_state, n_state = linear_recurrence_step(
+        C_c, B_c, v, log_a, dt_v, S_state, n_state, normalize=False
+    )
+    y = y + v.astype(jnp.float32) * params["D"][None, :, None]
+    y = (y.reshape(B, di) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return (y @ params["w_out"])[:, None], (window[:, 1:], S_state, n_state)
+
+
+def mamba2_state_init(cfg: ModelConfig, B: int):
+    di = cfg.ssm_expand * cfg.d_model
+    N, H = cfg.ssm_state, cfg.n_heads
+    P = di // H
+    dconv = di + 2 * H * N
+    return (
+        jnp.zeros((B, cfg.ssm_conv - 1, dconv), jnp.dtype(cfg.dtype)),
+        jnp.zeros((B, H, N, P), jnp.float32),
+        jnp.zeros((B, H, N), jnp.float32),
+    )

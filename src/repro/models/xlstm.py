@@ -1,0 +1,117 @@
+"""xLSTM LM: alternating mLSTM (parallel/chunked) and sLSTM (sequential)
+blocks, pre-norm residual, no separate FFN (d_ff=0 in the xlstm-350m config —
+the blocks carry their own up/down projections)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as ly
+from repro.models import ssm
+from repro.models.config import ModelConfig
+from repro.models.lm import chunked_ce_loss
+from repro.models.sharding import constrain
+
+
+def _is_slstm(cfg: ModelConfig, i: int) -> bool:
+    return cfg.slstm_every > 0 and (i + 1) % cfg.slstm_every == 0
+
+
+def init(rng, cfg: ModelConfig):
+    k_emb, k_layers = jax.random.split(rng)
+    keys = jax.random.split(k_layers, cfg.n_layers)
+    blocks = []
+    for i, k in enumerate(keys):
+        cell = ssm.init_slstm(k, cfg) if _is_slstm(cfg, i) else ssm.init_mlstm(k, cfg)
+        blocks.append({"ln": ly.init_rmsnorm(cfg.d_model, ly.dt(cfg)), "cell": cell})
+    return {
+        "embedding": ly.init_embedding(k_emb, cfg),
+        "blocks": blocks,
+        "ln_f": ly.init_rmsnorm(cfg.d_model, ly.dt(cfg)),
+    }
+
+
+def logical_axes(cfg: ModelConfig):
+    norm = {"scale": (None,)}
+    blocks = []
+    for i in range(cfg.n_layers):
+        cell = ssm.slstm_logical_axes(cfg) if _is_slstm(cfg, i) else ssm.mlstm_logical_axes(cfg)
+        blocks.append({"ln": norm, "cell": cell})
+    return {
+        "embedding": ly.embedding_logical_axes(cfg),
+        "blocks": blocks,
+        "ln_f": norm,
+    }
+
+
+def _apply_block(cfg, i, blk, x, state=None):
+    h = ly.rmsnorm(blk["ln"], x)
+    if _is_slstm(cfg, i):
+        out, new_state = ssm.slstm_block(blk["cell"], cfg, h, state)
+    else:
+        out, new_state = ssm.mlstm_block(blk["cell"], cfg, h, state)
+    return x + out, new_state
+
+
+def backbone(params, cfg: ModelConfig, x):
+    for i, blk in enumerate(params["blocks"]):
+        x, _ = _apply_block(cfg, i, blk, x)
+        x = constrain(x, "batch", None, None)
+    return ly.rmsnorm(params["ln_f"], x)
+
+
+def train_loss(params, cfg: ModelConfig, batch) -> jax.Array:
+    x = ly.embed(params["embedding"], cfg, batch["tokens"])
+    x = backbone(params, cfg, x)
+    return chunked_ce_loss(params, cfg, x, batch["labels"])
+
+
+# -- serving ------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, B: int, max_seq: int):
+    states = []
+    for i in range(cfg.n_layers):
+        if _is_slstm(cfg, i):
+            states.append(ssm.slstm_state_init(cfg, B))
+        else:
+            states.append(ssm.mlstm_state_init(cfg, B))
+    return {"states": states, "pos": jnp.int32(0)}
+
+
+def prefill(params, cfg: ModelConfig, batch, max_seq: int | None = None):
+    x = ly.embed(params["embedding"], cfg, batch["tokens"])
+    states = []
+    for i, blk in enumerate(params["blocks"]):
+        x, st = _apply_block(cfg, i, blk, x)
+        states.append(st)
+    x = ly.rmsnorm(params["ln_f"], x)
+    last = ly.logits(params["embedding"], cfg, x[:, -1:])
+    return last, {"states": states, "pos": jnp.int32(batch["tokens"].shape[1])}
+
+
+def decode_step(params, cfg: ModelConfig, token, cache):
+    x = ly.embed(params["embedding"], cfg, token)
+    new_states = []
+    for i, (blk, st) in enumerate(zip(params["blocks"], cache["states"])):
+        h = ly.rmsnorm(blk["ln"], x)
+        if _is_slstm(cfg, i):
+            out, st2 = ssm.slstm_decode_step(blk["cell"], cfg, h, st)
+        else:
+            out, st2 = ssm.mlstm_decode_step(blk["cell"], cfg, h, st)
+        x = x + out
+        new_states.append(st2)
+    x = ly.rmsnorm(params["ln_f"], x)
+    lg = ly.logits(params["embedding"], cfg, x)
+    return lg, {"states": new_states, "pos": cache["pos"] + 1}
+
+
+def cache_logical_axes(cfg: ModelConfig, B: int):
+    states = []
+    for i in range(cfg.n_layers):
+        if _is_slstm(cfg, i):
+            states.append((("batch", None),) * 4)  # h, c, n, m: (B, d)
+        else:
+            states.append((("batch", "heads", None, None), ("batch", "heads", None)))
+    return {"states": states, "pos": ()}

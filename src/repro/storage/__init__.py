@@ -1,0 +1,21 @@
+from repro.storage.backend import (
+    FaultyStore,
+    FileStore,
+    LatencyStore,
+    MemoryStore,
+    ObjectStore,
+    StorageError,
+)
+from repro.storage.proxy import Proxy, RequestResult, store_coded_object
+
+__all__ = [
+    "ObjectStore",
+    "MemoryStore",
+    "FileStore",
+    "LatencyStore",
+    "FaultyStore",
+    "StorageError",
+    "Proxy",
+    "RequestResult",
+    "store_coded_object",
+]

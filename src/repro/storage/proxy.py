@@ -1,0 +1,239 @@
+"""The front-end proxy of Fig.2, executing real I/O against an ObjectStore.
+
+A :class:`Proxy` owns L connection threads, a FIFO request queue, and a FIFO
+task queue, and serves high-level read/write requests with (n, k) MDS codes
+chosen per request by a :class:`repro.core.controller.Policy` — the
+real-I/O twin of :mod:`repro.core.simulator` (which is the statistics
+oracle).
+
+Reads use the Shared-Key layout: the coded object (N·b bytes) lives under
+one key; each task is a ranged read of one chunk; the request completes when
+k chunks arrive and the remaining tasks are cancelled (best-effort: queued
+tasks are dropped; in-flight ones are abandoned — their results discarded —
+matching a proxy that closes the connection).
+
+Writes encode k chunks into n, upload each as a part, and complete when any
+k parts are durable (the paper's write model; remaining uploads become
+background tasks, footnote 1). All n parts target the same multipart object.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue as _queue
+import threading
+import time
+
+import numpy as np
+
+from repro.coding.layout import SharedKeyLayout
+from repro.core.controller import Policy
+from repro.storage.backend import ObjectStore, StorageError
+
+
+@dataclasses.dataclass
+class RequestResult:
+    key: str
+    op: str
+    n: int
+    k: int
+    ok: bool
+    data: bytes | None
+    t_arrival: float
+    t_first_start: float
+    t_done: float
+    failures: int = 0
+
+    @property
+    def total_s(self) -> float:
+        return self.t_done - self.t_arrival
+
+    @property
+    def queueing_s(self) -> float:
+        return self.t_first_start - self.t_arrival
+
+    @property
+    def service_s(self) -> float:
+        return self.t_done - self.t_first_start
+
+
+class _Request:
+    def __init__(self, op, key, layout, payload, payload_len, n, k, cls_id):
+        self.op = op
+        self.key = key
+        self.layout: SharedKeyLayout = layout
+        self.payload = payload
+        self.payload_len = payload_len
+        self.n = n
+        self.k = k
+        self.cls_id = cls_id
+        self.t_arrival = time.monotonic()
+        self.t_first_start = None
+        self.done = threading.Event()
+        self.lock = threading.Lock()
+        self.completed: dict[int, bytes] = {}
+        self.failures = 0
+        self.cancelled = False
+        self.result: RequestResult | None = None
+
+
+class Proxy:
+    """L-threaded proxy with TOFEC admission control."""
+
+    def __init__(self, store: ObjectStore, policy: Policy, *, L: int = 16):
+        self.store = store
+        self.policy = policy
+        self.L = L
+        self._task_q: _queue.Queue = _queue.Queue()
+        self._request_q: _queue.Queue = _queue.Queue()
+        self._idle = L
+        self._state_lock = threading.Lock()
+        self._shutdown = False
+        self.results: list[RequestResult] = []
+        self._threads = [
+            threading.Thread(target=self._worker, daemon=True, name=f"proxy-{i}")
+            for i in range(L)
+        ]
+        self._admitter = threading.Thread(target=self._admit_loop, daemon=True)
+        for t in self._threads:
+            t.start()
+        self._admitter.start()
+
+    # -- public API ---------------------------------------------------------
+
+    def read(self, key: str, layout: SharedKeyLayout, payload_len: int | None = None,
+             cls_id: int = 0, timeout: float = 60.0) -> RequestResult:
+        req = self._submit("read", key, layout, None, payload_len, cls_id)
+        req.done.wait(timeout)
+        if req.result is None:
+            raise TimeoutError(f"read {key} timed out")
+        return req.result
+
+    def write(self, key: str, layout: SharedKeyLayout, payload: bytes,
+              cls_id: int = 0, timeout: float = 60.0) -> RequestResult:
+        req = self._submit("write", key, layout, payload, len(payload), cls_id)
+        req.done.wait(timeout)
+        if req.result is None:
+            raise TimeoutError(f"write {key} timed out")
+        return req.result
+
+    def close(self):
+        self._shutdown = True
+        self._request_q.put(None)
+        for _ in self._threads:
+            self._task_q.put(None)
+
+    # -- internals ----------------------------------------------------------
+
+    def _submit(self, op, key, layout, payload, payload_len, cls_id) -> _Request:
+        with self._state_lock:
+            q_len = self._request_q.qsize()
+            idle = self._idle
+        n, k = self.policy.select(q=q_len, idle=idle, cls_id=cls_id)
+        # Clamp to what the layout supports: k | K, n ≤ N/m.
+        k = max(kk for kk in layout.supported_k() if kk <= k)
+        n_max, _, _ = layout.code_for_k(k)
+        n = max(k, min(n, n_max))
+        req = _Request(op, key, layout, payload, payload_len, n, k, cls_id)
+        self._request_q.put(req)
+        return req
+
+    def _admit_loop(self):
+        while not self._shutdown:
+            req = self._request_q.get()
+            if req is None:
+                return
+            # Paper's admission rule: wait until the task queue is drained
+            # and a thread is idle before injecting the next batch.
+            while not self._shutdown:
+                with self._state_lock:
+                    ready = self._idle > 0 and self._task_q.empty()
+                if ready:
+                    break
+                time.sleep(1e-4)
+            self._inject(req)
+
+    def _inject(self, req: _Request):
+        if req.op == "read":
+            n_max, _, _ = req.layout.code_for_k(req.k)
+            # Prefer spread of chunk indices across the object (diversity).
+            order = list(np.random.default_rng(hash(req.key) & 0xFFFF).permutation(n_max))
+            for ci in order[: req.n]:
+                self._task_q.put((req, int(ci), None))
+        else:
+            coded = req.layout.encode_file(req.payload)
+            _, _, m = req.layout.code_for_k(req.k)
+            for ci in range(req.n):
+                off, ln = req.layout.chunk_range(req.k, ci)
+                self._task_q.put((req, int(ci), coded[off : off + ln]))
+
+    def _worker(self):
+        while True:
+            item = self._task_q.get()
+            if item is None:
+                return
+            req, ci, blob = item
+            if req.cancelled:
+                continue
+            with self._state_lock:
+                self._idle -= 1
+            if req.t_first_start is None:
+                req.t_first_start = time.monotonic()
+            try:
+                if req.op == "read":
+                    off, ln = req.layout.chunk_range(req.k, ci)
+                    data = self.store.get_range(req.key, off, ln)
+                else:
+                    self.store.upload_part(req.key, ci, blob)
+                    data = blob
+                ok = True
+            except StorageError:
+                ok = False
+            finally:
+                with self._state_lock:
+                    self._idle += 1
+            self._on_task_done(req, ci, data if ok else None, ok)
+
+    def _on_task_done(self, req: _Request, ci: int, data, ok: bool):
+        with req.lock:
+            if req.cancelled:
+                return
+            if ok:
+                req.completed[ci] = data
+            else:
+                req.failures += 1
+            if len(req.completed) >= req.k:
+                req.cancelled = True  # preemptive cancellation of the rest
+                self._finish(req, True)
+            elif req.failures > req.n - req.k:
+                req.cancelled = True
+                self._finish(req, False)
+
+    def _finish(self, req: _Request, ok: bool):
+        data = None
+        if ok and req.op == "read":
+            data = req.layout.reconstruct(req.k, req.completed, req.payload_len)
+        elif ok and req.op == "write":
+            # k parts durable → request complete (footnote 1: the rest could
+            # continue in background; here they are cancelled).
+            pass
+        req.result = RequestResult(
+            key=req.key,
+            op=req.op,
+            n=req.n,
+            k=req.k,
+            ok=ok,
+            data=data,
+            t_arrival=req.t_arrival,
+            t_first_start=req.t_first_start or time.monotonic(),
+            t_done=time.monotonic(),
+            failures=req.failures,
+        )
+        self.results.append(req.result)
+        req.done.set()
+
+
+def store_coded_object(store: ObjectStore, key: str, layout: SharedKeyLayout, payload: bytes):
+    """Pre-code and store a file for later proxy reads (paper: files are
+    pre-coded with the (n_max, k) code and stored on the cloud)."""
+    store.put(key, layout.encode_file(payload))

@@ -1,0 +1,3 @@
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.train.train_step import abstract_state, batch_logical_axes, make_train_step, param_specs
+from repro.train.trainer import Trainer, TrainerConfig

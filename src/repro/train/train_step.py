@@ -1,0 +1,96 @@
+"""Jittable train/eval steps with full sharding specs.
+
+``make_train_step(arch)`` returns (fn, in_shardings, out_shardings) builders
+usable both for the real trainer and the AOT dry-run (lower + compile on
+ShapeDtypeStructs). Gradients all-reduce in bf16 (compression) and the AdamW
+math runs in fp32 against fp32 moments (ZeRO-sharded alongside params).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.registry import Arch
+from repro.models.sharding import spec_for
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def batch_logical_axes(cfg):
+    axes = {"tokens": ("batch", None), "labels": ("batch", None)}
+    if cfg.family == "encdec":
+        axes["frames"] = ("batch", None, None)
+    if cfg.family == "vlm":
+        axes["patches"] = ("batch", None, None)
+    return axes
+
+
+def param_specs(arch: Arch, params_shapes):
+    """PartitionSpec tree for params (requires an active axis_rules ctx)."""
+    logical = arch.logical_axes()
+    return jax.tree.map(
+        lambda sds, lg: spec_for(tuple(sds.shape), tuple(lg)),
+        params_shapes,
+        logical,
+        is_leaf=lambda x: isinstance(x, tuple) and (len(x) == 0 or isinstance(x[0], (str, type(None)))),
+    )
+
+
+def opt_state_specs(p_specs):
+    return {"m": p_specs, "v": p_specs, "step": P()}
+
+
+def make_train_step(arch: Arch, opt_cfg: AdamWConfig | None = None):
+    opt_cfg = opt_cfg or AdamWConfig()
+    accum = max(1, arch.cfg.grad_accum)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            def loss_fn(p):
+                return arch.train_loss(p, batch)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+        else:
+            # §Perf microbatching: scan over `accum` microbatches, keeping
+            # only one microbatch's activations live at a time. Gradients
+            # accumulate in the param dtype (bf16 — documented compression).
+            def split(x):
+                B = x.shape[0]
+                return x.reshape(accum, B // accum, *x.shape[1:])
+
+            micro = {k: split(v) for k, v in batch.items()}
+
+            def body(carry, mb):
+                g_acc, loss_acc = carry
+                loss, grads = jax.value_and_grad(lambda p: arch.train_loss(p, mb))(params)
+                g_acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype), g_acc, grads)
+                return (g_acc, loss_acc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+            (grads, loss_sum), _ = jax.lax.scan(body, (g0, jnp.float32(0.0)), micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+        grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+        new_params, new_opt, metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(arch: Arch):
+    def eval_step(params, batch):
+        return arch.train_loss(params, batch)
+
+    return eval_step
+
+
+def abstract_state(arch: Arch, rng=None):
+    """ShapeDtypeStruct trees for (params, opt_state) without allocation."""
+    rng = rng if rng is not None else jax.random.key(0)
+    params_shapes = jax.eval_shape(lambda: arch.init(rng))
+    opt_shapes = jax.eval_shape(lambda: init_opt_state(params_shapes))
+    return params_shapes, opt_shapes

@@ -1,0 +1,87 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU, asserting output shapes and no NaNs; plus a prefill→decode consistency
+check per family."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import arch_names, get
+from repro.models.config import ShapeSpec
+from repro.models.registry import make_batch
+
+SMOKE_SHAPE = ShapeSpec("smoke_train", "train", seq=32, batch=2)
+
+
+@pytest.mark.parametrize("name", arch_names())
+def test_smoke_train_step(name):
+    arch = get(name, smoke=True)
+    params = arch.init(jax.random.key(0))
+    batch = make_batch(arch.cfg, SMOKE_SHAPE)
+
+    loss, grads = jax.jit(jax.value_and_grad(lambda p: arch.train_loss(p, batch)))(params)
+    assert np.isfinite(float(loss)), f"{name}: loss not finite"
+    # Loss at init should be near ln(vocab) for random labels.
+    assert 0.2 * np.log(arch.cfg.vocab) < float(loss) < 3.0 * np.log(arch.cfg.vocab)
+    leaf_norms = [float(jnp.linalg.norm(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)]
+    assert all(np.isfinite(leaf_norms)), f"{name}: non-finite grads"
+    assert any(n > 0 for n in leaf_norms), f"{name}: all-zero grads"
+
+
+@pytest.mark.parametrize("name", arch_names())
+def test_smoke_prefill_decode(name):
+    arch = get(name, smoke=True)
+    params = arch.init(jax.random.key(1))
+    B, S = 2, 16
+    shape = ShapeSpec("smoke_prefill", "prefill", seq=S, batch=B)
+    batch = make_batch(arch.cfg, shape)
+
+    last, cache = jax.jit(lambda p, b: arch.prefill(p, b, max_seq=S + 8))(params, batch)
+    assert last.shape == (B, 1, arch.cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(last)))
+
+    token = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    logits2, cache2 = jax.jit(arch.decode_step)(params, token, cache)
+    assert logits2.shape == (B, 1, arch.cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits2)))
+    # One more step to exercise cache advancement.
+    token3 = jnp.argmax(logits2, axis=-1).astype(jnp.int32)
+    logits3, _ = jax.jit(arch.decode_step)(params, token3, cache2)
+    assert np.all(np.isfinite(np.asarray(logits3)))
+
+
+@pytest.mark.parametrize("name", ["mistral-nemo-12b", "mixtral-8x7b", "zamba2-2.7b", "xlstm-350m"])
+def test_decode_matches_prefill_continuation(name):
+    """Decoding token t+1 after prefill[0:t] must match prefill[0:t+1]'s
+    last logits (teacher-forcing consistency)."""
+    arch = get(name, smoke=True)
+    params = arch.init(jax.random.key(2))
+    rng = np.random.default_rng(3)
+    B, S = 2, 12
+    toks = rng.integers(0, arch.cfg.vocab, size=(B, S + 1))
+    batch_s = {"tokens": jnp.asarray(toks[:, :S], jnp.int32)}
+    batch_s1 = {"tokens": jnp.asarray(toks, jnp.int32)}
+    if arch.cfg.family == "vlm":
+        patches = jnp.asarray(rng.normal(size=(B, arch.cfg.vision_patches, arch.cfg.d_model)), jnp.float32)
+        batch_s["patches"] = patches
+        batch_s1["patches"] = patches
+
+    _, cache = arch.prefill(params, batch_s, max_seq=S + 4)
+    step_logits, _ = arch.decode_step(params, jnp.asarray(toks[:, S : S + 1], jnp.int32), cache)
+    full_logits, _ = arch.prefill(params, batch_s1, max_seq=S + 4)
+    np.testing.assert_allclose(
+        np.asarray(step_logits), np.asarray(full_logits), rtol=0.08, atol=0.08
+    )
+
+
+def test_param_count_estimates():
+    """Analytic N vs actual init leaf count — within 10% for the big dense
+    archs (validates MODEL_FLOPS = 6·N·D inputs)."""
+    for name in ["yi-6b", "mistral-nemo-12b", "mixtral-8x7b"]:
+        arch = get(name, smoke=False)
+        est = arch.cfg.param_count_dense()
+        want = {"yi-6b": 6e9, "mistral-nemo-12b": 12e9, "mixtral-8x7b": 46e9}[name]
+        assert 0.7 * want < est < 1.4 * want, (name, est)

@@ -1,0 +1,168 @@
+"""Unit + property tests for GF(256), Cauchy RS, and the shared-key layout."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.coding import gf256, layout, rs
+
+
+# ---------------------------------------------------------------------------
+# GF(256)
+# ---------------------------------------------------------------------------
+
+
+def test_gf_tables_bijective():
+    exp = gf256.exp_table()
+    assert sorted(set(int(v) for v in exp[:255])) == list(range(1, 256))
+
+
+@given(st.integers(1, 255), st.integers(1, 255))
+def test_gf_mul_log_consistency(a, b):
+    exp, log = gf256.exp_table(), gf256.log_table()
+    got = int(gf256.mul(np.uint8(a), np.uint8(b)))
+    want = int(exp[(int(log[a]) + int(log[b])) % 255])
+    assert got == want
+
+
+@given(st.integers(0, 255), st.integers(0, 255), st.integers(0, 255))
+def test_gf_mul_distributes_over_xor(a, b, c):
+    left = int(gf256.mul(np.uint8(a), np.uint8(b ^ c)))
+    right = int(gf256.mul(np.uint8(a), np.uint8(b))) ^ int(gf256.mul(np.uint8(a), np.uint8(c)))
+    assert left == right
+
+
+@given(st.integers(1, 255))
+def test_gf_inverse(a):
+    assert int(gf256.mul(np.uint8(a), gf256.inv(np.uint8(a)))) == 1
+
+
+def test_gf_mat_inv_roundtrip():
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 3, 5, 8):
+        # Cauchy matrices are always invertible.
+        m = rs.cauchy_parity_matrix(2 * n, n)[:n, :n]
+        minv = gf256.mat_inv(m)
+        assert np.array_equal(gf256.matmul(m, minv), np.eye(n, dtype=np.uint8))
+
+
+def test_bitmatrix_matches_field_mul():
+    rng = np.random.default_rng(1)
+    for c in [0, 1, 2, 3, 7, 29, 128, 255]:
+        M = gf256.bitmatrix(c)
+        for v in rng.integers(0, 256, size=16):
+            bits = gf256.bytes_to_bitplanes(np.array([[v]], dtype=np.uint8))[:, 0]
+            out_bits = (M @ bits) % 2
+            got = gf256.bitplanes_to_bytes(out_bits.astype(np.uint8)[:, None])[0, 0]
+            assert int(got) == int(gf256.mul(np.uint8(c), np.uint8(v)))
+
+
+@given(st.integers(1, 6), st.integers(1, 64))
+@settings(max_examples=20, deadline=None)
+def test_bitplane_roundtrip(k, B):
+    rng = np.random.default_rng(k * 1000 + B)
+    data = rng.integers(0, 256, size=(k, B), dtype=np.uint8)
+    planes = gf256.bytes_to_bitplanes(data)
+    assert planes.shape == (8 * k, B)
+    assert np.array_equal(gf256.bitplanes_to_bytes(planes), data)
+
+
+def test_expand_bitmatrix_equals_gf_matmul():
+    rng = np.random.default_rng(2)
+    n, k, B = 6, 3, 32
+    G = rs.generator_matrix(n, k)
+    D = rng.integers(0, 256, size=(k, B), dtype=np.uint8)
+    want = gf256.matmul(G, D)
+    G2 = gf256.expand_bitmatrix(G)
+    D2 = gf256.bytes_to_bitplanes(D)
+    got = gf256.bitplanes_to_bytes(((G2.astype(np.int64) @ D2.astype(np.int64)) % 2).astype(np.uint8))
+    assert np.array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Reed-Solomon
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.integers(1, 12).flatmap(
+        lambda k: st.tuples(st.just(k), st.integers(k, min(24, 2 * k + 6)))
+    ),
+    st.integers(1, 80),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_rs_any_k_of_n_decodes(kn, B, seed):
+    k, n = kn
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 256, size=(k, B), dtype=np.uint8)
+    coded = rs.encode(data, n, k)
+    assert np.array_equal(coded[:k], data)  # systematic
+    present = tuple(sorted(rng.choice(n, size=k, replace=False).tolist()))
+    got = rs.decode(coded[list(present)], present, n, k)
+    assert np.array_equal(got, data)
+
+
+def test_rs_rejects_bad_args():
+    with pytest.raises(ValueError):
+        rs.encode(np.zeros((3, 4), np.uint8), n=2, k=3)
+    with pytest.raises(ValueError):
+        rs.decode_matrix(6, 3, (0, 1))
+    with pytest.raises(ValueError):
+        rs.decode_matrix(6, 3, (0, 1, 7))
+
+
+def test_mds_code_wrapper():
+    code = rs.MDSCode(n=6, k=3)
+    assert code.r == 2.0
+    data = np.arange(3 * 10, dtype=np.uint8).reshape(3, 10)
+    coded = code.encode(data)
+    assert np.array_equal(code.decode(coded[[1, 3, 5]], (1, 3, 5)), data)
+
+
+# ---------------------------------------------------------------------------
+# Shared-key layout (Fig.3 semantics)
+# ---------------------------------------------------------------------------
+
+
+def test_fig3_example():
+    """3MB file, 0.5MB strips, (12, 6) strip code; usable as (2,1), (4,2), (6,3), (12,6)."""
+    lay = layout.SharedKeyLayout(K=6, r=2, strip_bytes=512)  # scaled-down strip
+    assert lay.N == 12
+    assert lay.supported_k() == [1, 2, 3, 6]
+    n_max, k, m = lay.code_for_k(1)
+    assert (n_max, m) == (2, 6)
+    n_max, k, m = lay.code_for_k(3)
+    assert (n_max, m) == (6, 2)
+    # (2,1): chunk 0 covers strips 0-5 (bytes [0, 6*512)), chunk 1 strips 6-11.
+    assert lay.chunk_range(1, 0) == (0, 6 * 512)
+    assert lay.chunk_range(1, 1) == (6 * 512, 6 * 512)
+
+
+@given(
+    st.sampled_from([1, 2, 3, 4, 6]),
+    st.integers(1, 3),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_layout_roundtrip_any_k_chunks(k, r, seed):
+    rng = np.random.default_rng(seed)
+    lay = layout.SharedKeyLayout(K=12, r=r, strip_bytes=64)
+    payload = rng.integers(0, 256, size=lay.file_bytes - 17, dtype=np.uint8).tobytes()
+    obj = lay.encode_file(payload)
+    assert len(obj) == lay.object_bytes
+    n_max, _, m = lay.code_for_k(k)
+    picks = rng.choice(n_max, size=k, replace=False)
+    chunks = {}
+    for ci in picks:
+        off, ln = lay.chunk_range(k, int(ci))
+        chunks[int(ci)] = obj[off : off + ln]
+    got = lay.reconstruct(k, chunks, payload_len=len(payload))
+    assert got == payload
+
+
+def test_layout_for_file_paper_params():
+    lay = layout.layout_for_file(file_bytes=3 * 2**20, k_max=6, r_max=2)
+    assert lay.K == 6 and lay.N == 12
+    assert lay.strip_bytes == 2**19  # 0.5 MB strips as in Fig.3

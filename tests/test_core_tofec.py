@@ -1,0 +1,218 @@
+"""Tests for the TOFEC core math: Eq.2-7, Corollary 1, thresholds, policies."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    PAPER_READ_3MB,
+    DelayParams,
+    FixedKAdaptivePolicy,
+    GreedyPolicy,
+    RequestClass,
+    StaticPolicy,
+    TofecTables,
+    TOFECPolicy,
+    build_class_plan,
+    fit_delay_params,
+    optimal_static_code,
+    q_for_k,
+    solve_r_for_k,
+)
+from repro.core import controller as ctrl
+from repro.core import queueing
+from repro.core.static_optimizer import _eq6_lhs, _eq6_rhs
+
+CLS = RequestClass("read3mb", 3.0, PAPER_READ_3MB, k_max=6, r_max=2.0, n_max=12)
+L = 16
+
+
+# ---------------------------------------------------------------------------
+# Eq.2 / Eq.3 / Eq.4-5
+# ---------------------------------------------------------------------------
+
+
+def test_service_delay_log_approx_close_to_exact():
+    for k, r in [(2, 2.0), (3, 2.0), (6, 2.0), (4, 1.5)]:
+        n = k * r
+        exact = queueing.service_delay_exact(PAPER_READ_3MB, 3.0, k, n)
+        approx = queueing.service_delay(PAPER_READ_3MB, 3.0, k, r)
+        assert approx == pytest.approx(exact, rel=0.15)
+
+
+def test_usage_eq3_matches_manual():
+    p, J, k, r = PAPER_READ_3MB, 3.0, 3.0, 2.0
+    want = p.delta_bar * k * r + p.delta_tilde * J * r + p.psi_bar * k + p.psi_tilde * J
+    assert queueing.usage(p, J, k, r) == pytest.approx(want)
+
+
+def test_queueing_delay_blows_up_at_capacity():
+    U = queueing.usage(PAPER_READ_3MB, 3.0, 1.0, 1.0)
+    cap = L / U
+    assert math.isinf(queueing.queueing_delay(cap * 1.01, U, L))
+    assert queueing.queueing_delay(cap * 0.5, U, L) < 0.1
+
+
+def test_lambda_bar_queue_roundtrip():
+    for lam_bar in [0.5, 4.0, 12.0, 15.9]:
+        Q = lam_bar**2 / (L * (L - lam_bar))
+        assert queueing.lambda_bar_from_queue(Q, L) == pytest.approx(lam_bar, rel=1e-9)
+
+
+def test_paper_calibration_headline_numbers():
+    """Light-load means should land near the paper's Fig.7 numbers."""
+    p, J = PAPER_READ_3MB, 3.0
+    basic = queueing.service_delay_exact(p, J, 1, 1)
+    repl = queueing.service_delay_exact(p, J, 1, 2)
+    best = queueing.service_delay_exact(p, J, 6, 12)
+    assert 0.18 < basic < 0.23  # paper: ~205 ms
+    assert 0.13 < repl < 0.17  # paper: ~151 ms
+    assert 0.06 < best < 0.10  # paper: ~84 ms
+    # capacity loss of delay-optimal static code (paper: ~30%)
+    cap_11 = queueing.capacity(p, J, 1, 1.0, L)
+    cap_63 = queueing.capacity(p, J, 3, 2.0, L)
+    assert 0.25 < cap_63 / cap_11 < 0.45
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1 / Corollary 1
+# ---------------------------------------------------------------------------
+
+
+def test_eq6_rhs_strictly_increasing_in_r():
+    rs = np.linspace(1.01, 50, 300)
+    vals = [_eq6_rhs(PAPER_READ_3MB, 3.0, r) for r in rs]
+    assert np.all(np.diff(vals) > 0)
+
+
+def test_eq6_lhs_strictly_increasing_in_k():
+    ks = np.linspace(0.1, 50, 300)
+    vals = [_eq6_lhs(PAPER_READ_3MB, 3.0, k) for k in ks]
+    assert np.all(np.diff(vals) > 0)
+
+
+@given(st.floats(0.2, 20.0))
+@settings(max_examples=25, deadline=None)
+def test_solve_r_satisfies_eq6(k):
+    r = solve_r_for_k(PAPER_READ_3MB, 3.0, k)
+    assert _eq6_rhs(PAPER_READ_3MB, 3.0, r) == pytest.approx(
+        _eq6_lhs(PAPER_READ_3MB, 3.0, k), rel=1e-6
+    )
+
+
+def test_r_increasing_in_k():
+    ks = np.linspace(0.3, 12, 60)
+    rs = [solve_r_for_k(PAPER_READ_3MB, 3.0, k) for k in ks]
+    assert np.all(np.diff(rs) > 0)
+
+
+def test_corollary1_q_strictly_decreasing_in_k():
+    ks = np.linspace(0.3, 12, 60)
+    qs = [q_for_k(PAPER_READ_3MB, 3.0, k, L) for k in ks]
+    assert np.all(np.diff(qs) < 0)
+
+
+def test_class_plan_threshold_interleaving():
+    """Paper §IV-C: H_1 > Q_1 > H_2 > Q_2 > ... > H_{m} > Q_m > H_{m+1} = 0."""
+    plan = build_class_plan(CLS, L)
+    for q_tab, h in [(plan.q_at_k, plan.h_k), (plan.q_at_n, plan.h_n)]:
+        assert np.all(np.diff(q_tab) < 0)
+        assert h[0] == math.inf and h[-1] == 0.0
+        for j in range(len(q_tab) - 1):
+            assert h[j] > q_tab[j] > h[j + 1]
+
+
+def test_plan_pick_monotone_in_q():
+    plan = build_class_plan(CLS, L)
+    qs = np.linspace(0.0, 30.0, 400)
+    ks = [plan.pick_k(q) for q in qs]
+    ns = [plan.pick_n(q) for q in qs]
+    assert np.all(np.diff(ks) <= 0) and np.all(np.diff(ns) <= 0)
+    assert ks[0] == CLS.k_max  # empty queue → max chunking
+    assert ks[-1] == 1  # huge backlog → no chunking
+    n0, k0 = plan.pick_code(0.0)
+    assert k0 == CLS.k_max and n0 <= CLS.r_max * k0
+
+
+def test_optimal_static_code_light_vs_heavy():
+    k_light, r_light, _ = optimal_static_code(CLS, L, lam=5.0)
+    k_heavy, r_heavy, _ = optimal_static_code(CLS, L, lam=60.0)
+    assert k_light > k_heavy
+    assert r_light > r_heavy
+
+
+# ---------------------------------------------------------------------------
+# Fitting (§V-A)
+# ---------------------------------------------------------------------------
+
+
+def test_fit_recovers_params_from_samples():
+    rng = np.random.default_rng(0)
+    p = PAPER_READ_3MB
+    sizes = np.array([0.5, 1.0, 1.5, 3.0])
+    delays = [p.sample(rng, B, size=60_000) for B in sizes]
+    got = fit_delay_params(sizes, delays, drop_worst_frac=0.0)
+    assert got.delta_bar == pytest.approx(p.delta_bar, rel=0.15)
+    assert got.delta_tilde == pytest.approx(p.delta_tilde, rel=0.15)
+    assert got.psi_bar == pytest.approx(p.psi_bar, rel=0.2)
+    assert got.psi_tilde == pytest.approx(p.psi_tilde, rel=0.15)
+
+
+# ---------------------------------------------------------------------------
+# Policies
+# ---------------------------------------------------------------------------
+
+
+def test_static_policy():
+    pol = StaticPolicy(6, 3)
+    assert pol.select(q=0, idle=16) == (6, 3)
+    with pytest.raises(ValueError):
+        StaticPolicy(2, 3)
+
+
+def test_tofec_policy_adapts_with_backlog():
+    pol = TOFECPolicy.for_classes([CLS], L)
+    n0, k0 = pol.select(q=0, idle=16)
+    assert k0 == CLS.k_max
+    pol.reset()
+    for _ in range(50):
+        n1, k1 = pol.select(q=500, idle=0)
+    assert k1 == 1 and n1 == 1
+
+
+def test_greedy_policy_matches_paper_rules():
+    pol = GreedyPolicy(k_max=6, r_max=2.0)
+    assert pol.select(q=3, idle=0) == (1, 1)
+    assert pol.select(q=0, idle=3) == (3, 3)
+    assert pol.select(q=0, idle=16) == (12, 6)
+    assert pol.select(q=0, idle=8) == (8, 6)
+
+
+def test_fixedk_policy_n_decreasing_in_backlog():
+    pol = FixedKAdaptivePolicy(CLS, L, k=6)
+    pol.reset()
+    n_light, k_light = pol.select(q=0, idle=16)
+    pol.reset()
+    for _ in range(50):
+        n_heavy, k_heavy = pol.select(q=500, idle=0)
+    assert k_light == k_heavy == 6
+    assert n_light > n_heavy >= 6
+
+
+def test_jax_controller_matches_numpy():
+    plan = build_class_plan(CLS, L)
+    tables = TofecTables.from_plan(plan)
+    pol = TOFECPolicy([plan], alpha=0.7)
+    import jax.numpy as jnp
+
+    q_ewma = jnp.float32(0.0)
+    pol.reset()
+    rng = np.random.default_rng(5)
+    for q in rng.integers(0, 40, size=60):
+        n_np, k_np = pol.select(q=int(q), idle=3)
+        q_ewma, n_j, k_j = ctrl.tofec_step_jax(q_ewma, jnp.float32(q), tables, 0.7)
+        assert (int(n_j), int(k_j)) == (n_np, k_np)
+        assert float(q_ewma) == pytest.approx(pol.q_ewma, rel=1e-5)

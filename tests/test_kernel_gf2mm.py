@@ -1,0 +1,91 @@
+"""Pallas gf2mm kernel vs pure-jnp/numpy oracles (interpret mode).
+
+Sweeps shapes, block sizes and dtypes per the kernel-test contract.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.coding import gf256, rs
+from repro.kernels.gf2mm import gf2mm, ops, ref
+
+
+@pytest.mark.parametrize(
+    "M,K,N",
+    [
+        (8, 8, 16),        # tiny, heavy padding
+        (48, 48, 256),     # (12,6) code bit-matrix shape
+        (128, 128, 128),   # exactly one tile
+        (130, 200, 513),   # ragged on all dims
+        (256, 2048, 1024), # k = 256 strips (max field), wide payload
+    ],
+)
+@pytest.mark.parametrize("in_dtype", [np.uint8, np.int8, np.float32])
+def test_gf2mm_matches_ref_shapes_dtypes(M, K, N, in_dtype):
+    rng = np.random.default_rng(M * 7 + K * 3 + N)
+    a = rng.integers(0, 2, size=(M, K)).astype(in_dtype)
+    b = rng.integers(0, 2, size=(K, N)).astype(in_dtype)
+    got = gf2mm.gf2_matmul(jnp.asarray(a), jnp.asarray(b), interpret=True)
+    want = ref.gf2_matmul_ref(a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(128, 128, 128), (128, 256, 256), (256, 512, 128)])
+def test_gf2mm_block_shape_sweep(bm, bn, bk):
+    rng = np.random.default_rng(bm + bn + bk)
+    M, K, N = 96, 320, 640
+    a = rng.integers(0, 2, size=(M, K), dtype=np.uint8)
+    b = rng.integers(0, 2, size=(K, N), dtype=np.uint8)
+    got = gf2mm.gf2_matmul(
+        jnp.asarray(a), jnp.asarray(b), block_m=bm, block_n=bn, block_k=bk, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.gf2_matmul_ref(a, b)))
+
+
+@given(
+    st.integers(1, 8).flatmap(lambda k: st.tuples(st.just(k), st.integers(k, 2 * k + 4))),
+    st.integers(1, 96),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_rs_encode_kernel_vs_numpy_oracle(kn, B, seed):
+    k, n = kn
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 256, size=(k, B), dtype=np.uint8)
+    got = np.asarray(ops.rs_encode(jnp.asarray(data), n=n, k=k, interpret=True))
+    want = rs.encode(data, n, k)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_rs_decode_kernel_roundtrip():
+    rng = np.random.default_rng(42)
+    n, k, B = 12, 6, 200
+    data = rng.integers(0, 256, size=(k, B), dtype=np.uint8)
+    coded = np.asarray(ops.rs_encode(jnp.asarray(data), n=n, k=k, interpret=True))
+    present = (1, 3, 6, 8, 10, 11)
+    got = np.asarray(
+        ops.rs_decode(jnp.asarray(coded[list(present)]), n=n, k=k, present=present, interpret=True)
+    )
+    np.testing.assert_array_equal(got, data)
+
+
+def test_gf256_matmul_ref_matches_numpy():
+    rng = np.random.default_rng(3)
+    g = rng.integers(0, 256, size=(5, 7), dtype=np.uint8)
+    d = rng.integers(0, 256, size=(7, 33), dtype=np.uint8)
+    got = np.asarray(ref.gf256_matmul_ref(g, d))
+    want = gf256.matmul(g, d)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_encode_decode_blob_helpers():
+    rng = np.random.default_rng(9)
+    payload = rng.integers(0, 256, size=10_001, dtype=np.uint8)
+    strips = ops.encode_blob(payload, n=10, k=4)
+    assert strips.shape[0] == 10
+    present = (0, 5, 7, 9)
+    got = ops.decode_blob(strips[list(present)], present, n=10, k=4, payload_len=payload.size)
+    np.testing.assert_array_equal(got, payload)

@@ -1,0 +1,53 @@
+"""Serving engine: storage-fed prompts → prefill → batched decode."""
+
+import numpy as np
+
+from repro.coding.layout import SharedKeyLayout
+from repro.core import StaticPolicy
+from repro.models import get
+from repro.serve import ServingEngine
+from repro.storage import MemoryStore, Proxy
+
+import jax
+
+
+def test_generate_shapes_and_determinism():
+    arch = get("qwen1.5-0.5b", smoke=True)
+    params = arch.init(jax.random.key(0))
+    eng = ServingEngine(arch, params, max_seq=64)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, arch.cfg.vocab, size=(3, 8)).astype(np.int32)
+    out1 = eng.generate(prompts, steps=5)
+    out2 = eng.generate(prompts, steps=5)
+    assert out1.shape == (3, 5)
+    np.testing.assert_array_equal(out1, out2)
+
+
+def test_serve_via_erasure_coded_prompt_storage():
+    arch = get("qwen1.5-0.5b", smoke=True)
+    params = arch.init(jax.random.key(1))
+    eng = ServingEngine(arch, params, max_seq=64)
+
+    prompt_len = 16
+    layout = SharedKeyLayout(K=4, r=2, strip_bytes=prompt_len)  # 4·16B strips
+    store = MemoryStore()
+    rng = np.random.default_rng(2)
+    keys = []
+    truth = []
+    for i in range(3):
+        toks = rng.integers(0, arch.cfg.vocab, size=(prompt_len,)).astype(np.int32)
+        key = f"prompt/{i}"
+        ServingEngine.store_prompt(store, key, layout, toks)
+        keys.append(key)
+        truth.append(toks)
+
+    proxy = Proxy(store, StaticPolicy(4, 2), L=8)
+    try:
+        res = eng.serve(proxy, layout, keys, prompt_len=prompt_len, steps=4)
+        assert res.tokens.shape == (3, 4)
+        assert all(c == (4, 2) for c in res.codes)
+        # Cross-check: direct generation from the ground-truth prompts.
+        direct = eng.generate(np.stack(truth), steps=4)
+        np.testing.assert_array_equal(res.tokens, direct)
+    finally:
+        proxy.close()

@@ -1,0 +1,77 @@
+"""End-to-end behaviour tests for the paper's system (the TOFEC claims that
+matter, exercised through the full stack — controller → simulator, and
+storage → proxy → erasure decode → model serving)."""
+
+import numpy as np
+
+from repro.coding.layout import SharedKeyLayout
+from repro.core import (
+    PAPER_READ_3MB,
+    RequestClass,
+    StaticPolicy,
+    TOFECPolicy,
+)
+from repro.core import queueing
+from repro.core.controller import MPCPolicy
+from repro.core.simulator import poisson_arrivals, simulate
+from repro.core.traces import TraceSampler
+from repro.storage import FaultyStore, MemoryStore, Proxy, store_coded_object
+
+CLS = RequestClass("read3mb", 3.0, PAPER_READ_3MB, k_max=6, r_max=2.0, n_max=12)
+L = 16
+SAMPLER = TraceSampler(PAPER_READ_3MB, 3.0, correlation=0.14)
+
+
+def _run(policy, lam, count=5000, seed=11):
+    rng = np.random.default_rng(seed)
+    return simulate(policy, poisson_arrivals(rng, lam, count), SAMPLER, L=L, seed=seed)
+
+
+def test_paper_headline_light_load_gain():
+    """TOFEC ≥ 1.7× lower mean delay than basic at light load (paper ~2.5×)."""
+    cap = queueing.capacity(PAPER_READ_3MB, 3.0, 1, 1.0, L)
+    tofec = _run(TOFECPolicy.for_classes([CLS], L), 0.15 * cap)
+    basic = _run(StaticPolicy(1, 1), 0.15 * cap)
+    assert basic.totals().mean() / tofec.totals().mean() > 1.7
+
+
+def test_paper_headline_capacity_retention():
+    """TOFEC sustains ≥ 2.3× the arrival rate that the delay-optimal static
+    (6,3) code can (paper: >3×) — queues stay bounded where (6,3) diverges."""
+    cap = queueing.capacity(PAPER_READ_3MB, 3.0, 1, 1.0, L)
+    lam = 0.9 * cap  # ≈ 2.3× the capacity of the (6,3) code
+    tofec = _run(TOFECPolicy.for_classes([CLS], L), lam, count=8000)
+    static63 = _run(StaticPolicy(6, 3), lam, count=8000)
+    assert tofec.totals().mean() < 0.6  # bounded
+    assert static63.totals().mean() > 5 * tofec.totals().mean()  # divergent
+    cap63 = queueing.capacity(PAPER_READ_3MB, 3.0, 3, 2.0, L)
+    assert cap / cap63 > 2.3
+
+
+def test_beyond_paper_mpc_dominates_threshold_controller():
+    cap = queueing.capacity(PAPER_READ_3MB, 3.0, 1, 1.0, L)
+    for frac in (0.4, 0.75):
+        tofec = _run(TOFECPolicy.for_classes([CLS], L), frac * cap)
+        mpc = _run(MPCPolicy(CLS, L), frac * cap)
+        assert mpc.totals().mean() < tofec.totals().mean() * 1.02, frac
+
+
+def test_full_stack_read_after_node_losses():
+    """Fig.3 layout + proxy + RS decode survive failures of chunk reads."""
+    layout = SharedKeyLayout(K=6, r=2, strip_bytes=512)
+    rng = np.random.default_rng(0)
+    payload = rng.integers(0, 256, size=layout.file_bytes, dtype=np.uint8).tobytes()
+    inner = MemoryStore()
+    store_coded_object(inner, "blob", layout, payload)
+    store = FaultyStore(inner, p_fail=0.45, seed=1)
+    proxy = Proxy(store, StaticPolicy(6, 3), L=8)
+    try:
+        ok = 0
+        for _ in range(12):
+            res = proxy.read("blob", layout, payload_len=len(payload))
+            if res.ok:
+                assert res.data == payload
+                ok += 1
+        assert ok >= 6  # (6,3) tolerates 3 failures/request at 45% fail rate
+    finally:
+        proxy.close()

@@ -1,10 +1,16 @@
 """Kernel micro-benchmarks: GF(2) bit-matrix RS encode (Pallas, interpret)
-vs the table-based GF(256) jnp oracle, plus the checkpoint encode path.
+vs the table-based GF(256) jnp oracle, plus the unified codec engine's
+batched-throughput sweep (backend × batch × (n, k)).
 
 On CPU the Pallas kernel runs in interpret mode, so wall-clock here measures
 the *reference environment*, not TPU perf — the TPU story is the §Roofline
 arithmetic-intensity argument (bit-matrix matmul is MXU-shaped; table
 lookups are not). We report both wall time and derived arithmetic intensity.
+
+The codec sweep is the measurement behind the TOFEC amortization claim
+(coding overhead Ψ caps throughput under load, FAST CLOUD §IV): one batched
+``Codec.encode`` over b queued objects vs b per-object calls. Rows report
+MB/s for each and the batched/looped speedup.
 """
 
 from __future__ import annotations
@@ -17,25 +23,28 @@ import numpy as np
 
 from benchmarks.common import BenchTimer
 from repro.coding import rs
+from repro.coding.codec import Codec
 from repro.kernels.gf2mm import gf2mm, ops, ref
 
 
 def bench_gf2mm(n: int = 12, k: int = 6, B: int = 16384) -> list[str]:
     rng = np.random.default_rng(0)
-    data = jnp.asarray(rng.integers(0, 256, size=(k, B), dtype=np.uint8))
+    data = rng.integers(0, 256, size=(k, B), dtype=np.uint8)
+    jdata = jnp.asarray(data)
 
+    # jit the wrapper so both timed paths measure pure device dispatch
     enc = jax.jit(lambda d: ops.rs_encode(d, n=n, k=k, interpret=True))
-    enc(data).block_until_ready()
+    enc(jdata).block_until_ready()
     with BenchTimer("kernel_rs_encode_pallas", calls=3) as t1:
         for _ in range(3):
-            enc(data).block_until_ready()
+            enc(jdata).block_until_ready()
 
     par = jnp.asarray(rs.cauchy_parity_matrix(n, k))
     ref_fn = jax.jit(lambda d: ref.gf256_matmul_ref(par, d))
-    ref_fn(data).block_until_ready()
+    ref_fn(jdata).block_until_ready()
     with BenchTimer("kernel_rs_encode_tableref", calls=3) as t2:
         for _ in range(3):
-            ref_fn(data).block_until_ready()
+            ref_fn(jdata).block_until_ready()
 
     # Derived: GF(2) matmul arithmetic intensity on TPU for this shape.
     M, K = 8 * (n - k), 8 * k
@@ -45,6 +54,47 @@ def bench_gf2mm(n: int = 12, k: int = 6, B: int = 16384) -> list[str]:
         t1.row(f"payload={k * B / 2 ** 20:.1f}MB"),
         t2.row(f"bitmm_arith_intensity={flops / bytes_:.1f}flop/B"),
     ]
+
+
+def bench_codec_sweep(B: int = 4096) -> list[str]:
+    """Backend × batch × (n, k): batched encode vs the per-object loop.
+
+    The acceptance bar for the unified engine: batched throughput ≥ the
+    per-object loop at batch ≥ 8 on the jnp or pallas-interpret backend
+    (per-launch/trace overhead amortized across the admission round).
+    """
+    rng = np.random.default_rng(7)
+    rows: list[str] = []
+    for backend in ("numpy", "jnp", "pallas"):
+        codec = Codec(backend)
+        for n, k in ((8, 4), (12, 6)):
+            for batch in (1, 8, 32):
+                data = rng.integers(0, 256, size=(batch, k, B), dtype=np.uint8)
+                # warm both paths (jit compile outside the timed region)
+                codec.encode(data, n, k)
+                codec.encode(data[0], n, k)
+                mb = batch * k * B / 2**20
+
+                t0 = time.monotonic()
+                codec.encode(data, n, k)
+                dt_batched = time.monotonic() - t0
+
+                t0 = time.monotonic()
+                for i in range(batch):
+                    codec.encode(data[i], n, k)
+                dt_looped = time.monotonic() - t0
+
+                speedup = dt_looped / max(dt_batched, 1e-9)
+                timer = BenchTimer(f"codec_encode_{backend}_n{n}k{k}_b{batch}", calls=1)
+                timer.elapsed = dt_batched
+                rows.append(
+                    timer.row(
+                        f"batched={mb / dt_batched:.1f}MB/s"
+                        f"|looped={mb / dt_looped:.1f}MB/s"
+                        f"|speedup={speedup:.2f}x"
+                    )
+                )
+    return rows
 
 
 def bench_ckpt_encode(leaf_mb: int = 1) -> list[str]:
@@ -61,4 +111,4 @@ def bench_ckpt_encode(leaf_mb: int = 1) -> list[str]:
     return [t.row(f"encode_{leaf_mb}MB@{mbps:.1f}MB/s"), t2.row("decode_ok")]
 
 
-ALL_KERNEL = [bench_gf2mm, bench_ckpt_encode]
+ALL_KERNEL = [bench_gf2mm, bench_codec_sweep, bench_ckpt_encode]

@@ -2,16 +2,21 @@
 
 Every checkpoint leaf (one array of the params/opt-state pytree) is:
   1. serialized (raw bytes + dtype/shape manifest entry, crc32 checksum),
-  2. RS-encoded into n strips of size ⌈bytes/k⌉ through the MXU bit-matrix
-     kernel path (:mod:`repro.kernels.gf2mm`),
+  2. RS-encoded into n strips of size ⌈bytes/k⌉ through the unified batched
+     codec engine (:mod:`repro.coding.codec` — numpy / jnp / Pallas backend
+     per ``REPRO_CODEC_BACKEND``); leaves sharing an (n, k) plan are encoded
+     in ONE batched kernel call,
   3. written as n independent objects ``{prefix}/step{s}/{leaf}/strip{i}``.
 
-Restore fetches any k surviving strips per leaf and decodes — node/object
-loss up to n−k per leaf is invisible. The chunking level k is chosen
-per-write by the TOFEC controller from the writer backlog: an idle writer
-uses high k (many small parallel strips → low write latency), a backlogged
-writer drops to k=1 (one big strip + parity → max throughput), which is
-exactly the paper's throughput-delay trade-off transplanted to checkpoints.
+Restore fetches any k surviving strips per leaf and batch-decodes all leaves
+that share (n, k, strip size) in one codec call — the engine accepts a
+per-item ``present`` matrix, so heterogeneous erasure patterns across
+leaves still form a single batch. Node/object loss up to n−k per leaf is
+invisible. The chunking level k is chosen per-write by the TOFEC controller
+from the writer backlog: an idle writer uses high k (many small parallel
+strips → low write latency), a backlogged writer drops to k=1 (one big
+strip + parity → max throughput), which is exactly the paper's
+throughput-delay trade-off transplanted to checkpoints.
 
 ``AsyncCheckpointer`` overlaps encode+write with training steps.
 """
@@ -27,8 +32,8 @@ import zlib
 import jax
 import numpy as np
 
+from repro.coding import codec as codec_mod
 from repro.core.controller import Policy, StaticPolicy
-from repro.kernels.gf2mm import ops as rsops
 from repro.storage.backend import ObjectStore, StorageError
 
 
@@ -57,12 +62,18 @@ def save_checkpoint(
     n_max: int = 8,
     k_max: int = 4,
     pending_hint: int = 0,
+    codec: codec_mod.Codec | None = None,
 ) -> dict:
     """Write one erasure-coded checkpoint; returns the manifest."""
     policy = policy or StaticPolicy(n_max, k_max)
+    codec = codec or codec_mod.get_codec()
     leaves = _leaf_paths(tree)
     manifest = {"step": step, "leaves": {}, "format": 1}
-    for i, (name, arr) in enumerate(leaves):
+
+    # Pick a plan per leaf, then group by (n, k) so each group shards
+    # through ONE batched encode call.
+    plans: list[tuple[str, np.ndarray, int, int]] = []
+    for name, arr in leaves:
         # Backlog signal = externally pending checkpoint snapshots (the
         # async writer's queue depth) — the TOFEC queue-length analogue.
         # An idle writer chunks finely (low latency); a backlogged one
@@ -71,19 +82,35 @@ def save_checkpoint(
         n, k = policy.select(q=q, idle=max(0, n_max - 1), cls_id=0)
         n = min(n, n_max)
         k = min(k, k_max, max(1, n))
-        payload = arr.tobytes()
-        strips = rsops.encode_blob(np.frombuffer(payload, np.uint8), n=n, k=k)
-        for si in range(n):
-            store.put(f"{prefix}/step{step}/{name}/strip{si}", strips[si].tobytes())
-        manifest["leaves"][name] = {
-            "shape": list(arr.shape),
-            "dtype": str(arr.dtype),
-            "n": int(n),
-            "k": int(k),
-            "bytes": len(payload),
-            "strip_bytes": int(strips.shape[1]),
-            "crc": zlib.crc32(payload) & 0xFFFFFFFF,
-        }
+        plans.append((name, arr, n, k))
+
+    # Group by (n, k, pow2-bucketed strip width): batching pads members to
+    # the group max, so bucketing bounds zero-padding waste at 2× per leaf
+    # (a lone giant embedding never drags 100 small leaves up to its width)
+    # and matches the codec's own internal shape buckets.
+    groups: dict[tuple[int, int, int], list[tuple[str, np.ndarray]]] = {}
+    for name, arr, n, k in plans:
+        strip = codec_mod.Codec.strip_bytes(arr.nbytes, k)
+        groups.setdefault((n, k, codec_mod.pow2_bucket(strip, 128)), []).append((name, arr))
+
+    for (n, k, _bucket), members in groups.items():
+        payloads = [arr.tobytes() for _, arr in members]
+        all_strips = codec.encode_blobs(
+            [np.frombuffer(p, np.uint8) for p in payloads], n=n, k=k
+        )
+        for (name, arr), payload, strips in zip(members, payloads, all_strips):
+            strip = strips.shape[1]  # this leaf's own ⌈bytes/k⌉ width
+            for si in range(n):
+                store.put(f"{prefix}/step{step}/{name}/strip{si}", strips[si].tobytes())
+            manifest["leaves"][name] = {
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "n": int(n),
+                "k": int(k),
+                "bytes": len(payload),
+                "strip_bytes": int(strip),
+                "crc": zlib.crc32(payload) & 0xFFFFFFFF,
+            }
     store.put(f"{prefix}/step{step}/MANIFEST", json.dumps(manifest).encode())
     store.put(f"{prefix}/LATEST", str(step).encode())
     return manifest
@@ -96,14 +123,26 @@ def latest_step(store: ObjectStore, prefix: str) -> int | None:
         return None
 
 
-def restore_checkpoint(store: ObjectStore, prefix: str, step: int, tree_like) -> object:
+def restore_checkpoint(
+    store: ObjectStore,
+    prefix: str,
+    step: int,
+    tree_like,
+    *,
+    codec: codec_mod.Codec | None = None,
+) -> object:
     """Rebuild a pytree matching ``tree_like`` from any-k-of-n strips."""
+    codec = codec or codec_mod.get_codec()
     manifest = json.loads(store.get(f"{prefix}/step{step}/MANIFEST").decode())
     leaves = _leaf_paths(tree_like)
-    out_leaves = []
-    for name, like in leaves:
+
+    # Fetch any k surviving strips per leaf, then batch-decode all leaves
+    # sharing (n, k, strip_bytes) in one codec call (per-item present).
+    fetched: dict[str, tuple[np.ndarray, tuple[int, ...]]] = {}
+    groups: dict[tuple[int, int, int], list[str]] = {}
+    for name, _ in leaves:
         meta = manifest["leaves"][name]
-        n, k, nbytes = meta["n"], meta["k"], meta["bytes"]
+        n, k = meta["n"], meta["k"]
         got: dict[int, bytes] = {}
         for si in range(n):
             if len(got) >= k:
@@ -117,10 +156,23 @@ def restore_checkpoint(store: ObjectStore, prefix: str, step: int, tree_like) ->
                 f"{name}: only {len(got)}/{k} strips survive — unrecoverable"
             )
         present = tuple(sorted(got))[:k]
-        strips = np.stack(
-            [np.frombuffer(got[si], np.uint8) for si in present]
-        )
-        payload = rsops.decode_blob(strips, present, n=n, k=k, payload_len=nbytes)
+        strips = np.stack([np.frombuffer(got[si], np.uint8) for si in present])
+        fetched[name] = (strips, present)
+        groups.setdefault((n, k, meta["strip_bytes"]), []).append(name)
+
+    payloads: dict[str, np.ndarray] = {}
+    for (n, k, _strip), names in groups.items():
+        rows = np.stack([fetched[nm][0] for nm in names])
+        present = np.stack([fetched[nm][1] for nm in names])
+        decoded = np.asarray(codec.decode(rows, present, n, k))
+        for i, nm in enumerate(names):
+            nbytes = manifest["leaves"][nm]["bytes"]
+            payloads[nm] = decoded[i].reshape(-1)[:nbytes]
+
+    out_leaves = []
+    for name, like in leaves:
+        meta = manifest["leaves"][name]
+        payload = payloads[name]
         if (zlib.crc32(payload.tobytes()) & 0xFFFFFFFF) != meta["crc"]:
             raise StorageError(f"{name}: checksum mismatch after decode")
         arr = np.frombuffer(payload.tobytes(), dtype=meta["dtype"]).reshape(meta["shape"])

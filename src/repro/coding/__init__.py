@@ -1,4 +1,6 @@
 from repro.coding import gf256, layout, rs
+from repro.coding import codec as codec_module
+from repro.coding.codec import Codec, get_codec
 from repro.coding.layout import SharedKeyLayout, layout_for_file
 from repro.coding.rs import MDSCode
 
@@ -6,6 +8,9 @@ __all__ = [
     "gf256",
     "rs",
     "layout",
+    "codec_module",
+    "Codec",
+    "get_codec",
     "MDSCode",
     "SharedKeyLayout",
     "layout_for_file",

@@ -163,6 +163,15 @@ def expand_bitmatrix(m: np.ndarray) -> np.ndarray:
     return blocks.transpose(0, 2, 1, 3).reshape(8 * r, 8 * c)
 
 
+def expand_bitmatrix_batched(mats: np.ndarray) -> np.ndarray:
+    """Expand (batch, r, c) GF(256) matrices to (batch, 8r, 8c) in one
+    vectorized fancy-index — no per-item Python loop on the hot path."""
+    mats = np.asarray(mats, dtype=np.uint8)
+    b, r, c = mats.shape
+    blocks = _bitmatrix_cache()[mats]  # (b, r, c, 8, 8)
+    return blocks.transpose(0, 1, 3, 2, 4).reshape(b, 8 * r, 8 * c)
+
+
 def bytes_to_bitplanes(data: np.ndarray) -> np.ndarray:
     """(k, B) uint8 -> (8k, B) 0/1 uint8, LSB-first within each row block.
 

@@ -9,15 +9,23 @@ chunks cover k*m = K strips, which reconstruct the file.
 This is what makes variable chunk sizing storage-efficient: one stored
 object (cost r × file size) supports every chunking level, vs. Unique-Key's
 extra r × file size *per chunk size* (§III-A.1).
+
+Encode/decode route through the unified batched codec engine
+(:mod:`repro.coding.codec`); the backend follows ``REPRO_CODEC_BACKEND``
+(numpy oracle by default, ``jnp`` / ``pallas`` for bulk batched paths) and
+can be overridden per call. :func:`encode_files` amortizes one kernel
+launch over a whole batch of same-class files — the proxy's write-queue
+drain uses it.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import numpy as np
 
-from repro.coding import rs
+from repro.coding import codec as codec_mod
 
 
 def divisors(x: int) -> list[int]:
@@ -87,17 +95,36 @@ class SharedKeyLayout:
 
     # -- encode / decode ----------------------------------------------------
 
-    def encode_file(self, payload: bytes) -> bytes:
-        """Pad payload to K*b, strip-encode, return the N*b coded object."""
+    def _strip_data(self, payload: bytes) -> np.ndarray:
         if len(payload) > self.file_bytes:
             raise ValueError(f"payload {len(payload)}B exceeds {self.file_bytes}B")
         buf = np.zeros(self.file_bytes, dtype=np.uint8)
         buf[: len(payload)] = np.frombuffer(payload, dtype=np.uint8)
-        data = buf.reshape(self.K, self.strip_bytes)
-        coded = rs.encode(data, self.N, self.K)
-        return coded.tobytes()
+        return buf.reshape(self.K, self.strip_bytes)
 
-    def reconstruct(self, k: int, chunks: dict[int, bytes], payload_len: int | None = None) -> bytes:
+    def encode_file(self, payload: bytes, codec: "codec_mod.Codec | None" = None) -> bytes:
+        """Pad payload to K*b, strip-encode, return the N*b coded object."""
+        codec = codec or codec_mod.get_codec()
+        coded = codec.encode(self._strip_data(payload), self.N, self.K)
+        return np.asarray(coded).tobytes()
+
+    def encode_files(
+        self, payloads: Sequence[bytes], codec: "codec_mod.Codec | None" = None
+    ) -> list[bytes]:
+        """Batch-encode many files of this class in one codec call.
+
+        This is the proxy's admission-round amortization: one (batch, K, b)
+        → (batch, N, b) kernel launch instead of per-object launches.
+        """
+        if not payloads:
+            return []
+        codec = codec or codec_mod.get_codec()
+        data = np.stack([self._strip_data(p) for p in payloads])
+        coded = np.asarray(codec.encode(data, self.N, self.K))
+        return [coded[i].tobytes() for i in range(len(payloads))]
+
+    def reconstruct(self, k: int, chunks: dict[int, bytes], payload_len: int | None = None,
+                    codec: "codec_mod.Codec | None" = None) -> bytes:
         """Rebuild the file from any >= k chunk-level fetches at level k.
 
         ``chunks`` maps chunk index (at level k) -> chunk bytes. Exactly the
@@ -116,7 +143,8 @@ class SharedKeyLayout:
                 raise ValueError(f"chunk {ci}: got {blob.size}B, want {m * self.strip_bytes}B")
             rows[slot * m : (slot + 1) * m] = blob.reshape(m, self.strip_bytes)
             strip_ids.extend(range(ci * m, (ci + 1) * m))
-        data = rs.decode(rows, tuple(strip_ids), self.N, self.K)
+        codec = codec or codec_mod.get_codec()
+        data = np.asarray(codec.decode(rows, tuple(strip_ids), self.N, self.K))
         out = data.reshape(-1).tobytes()
         return out if payload_len is None else out[:payload_len]
 

@@ -1,4 +1,12 @@
-from repro.kernels.gf2mm.gf2mm import gf2_matmul
+from repro.kernels.gf2mm.gf2mm import gf2_matmul, gf2_rs_matmul_bytes, tpu_compiler_params
 from repro.kernels.gf2mm.ops import decode_blob, encode_blob, rs_decode, rs_encode
 
-__all__ = ["gf2_matmul", "rs_encode", "rs_decode", "encode_blob", "decode_blob"]
+__all__ = [
+    "gf2_matmul",
+    "gf2_rs_matmul_bytes",
+    "tpu_compiler_params",
+    "rs_encode",
+    "rs_decode",
+    "encode_blob",
+    "decode_blob",
+]

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: GF(2) matrix multiply (bit-matrix Reed-Solomon encode).
+"""Pallas TPU kernels: GF(2) matrix multiply (bit-matrix Reed-Solomon encode).
 
 TPU adaptation of the paper's MDS encode/decode hot loop (DESIGN.md §3):
 GF(256) arithmetic is lifted to GF(2) by expanding each field constant into
@@ -11,10 +11,21 @@ where G2 is the expanded parity matrix and D2 the LSB-first bit-planes of
 the data. A 0/1 matmul with int accumulation is exactly MXU-shaped; the
 mod-2 runs in the epilogue on the VPU.
 
-The kernel is a classic three-level tiled matmul:
-  grid = (M / bm, N / bn, K / bk), K innermost ("arbitrary" semantics),
-  fp32 VMEM scratch accumulator, bf16 MXU operands (0/1 values are exact in
-  bf16; sums <= K <= 8*256 = 2048 are exact in fp32).
+Two kernels are provided:
+
+* :func:`gf2_matmul` — the classic three-level tiled 0/1 matmul
+  (grid = (M/bm, N/bn, K/bk), fp32 VMEM scratch accumulator, bf16 MXU
+  operands); callers pack/unpack bit-planes themselves.
+* :func:`gf2_rs_matmul_bytes` — the batched, fused codec path: raw uint8
+  byte strips in, raw uint8 byte strips out. The bitplane unpack of the
+  data tile, the GF(2) matmul against a per-item bit-matrix, and the
+  bitplane repack of the result all happen inside one kernel invocation
+  (grid = (batch, M/bm, B/bn)), so a batch of codewords is one launch and
+  ``bytes_to_bitplanes`` stops being a separate pass over HBM.
+
+Compat: the pinned JAX names the TPU compiler-params dataclass
+``TPUCompilerParams``; newer releases renamed it ``CompilerParams``.
+:func:`tpu_compiler_params` resolves whichever exists.
 """
 
 from __future__ import annotations
@@ -25,6 +36,25 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(**kwargs):
+    """Build TPU compiler params across the CompilerParams rename.
+
+    JAX < 0.5 exposes ``pltpu.TPUCompilerParams``; newer versions renamed it
+    to ``pltpu.CompilerParams``. Returns None when neither exists (e.g. a
+    CPU-only build stripped of the TPU backend) so callers can omit the
+    argument entirely.
+    """
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(pltpu, "TPUCompilerParams", None)
+    return cls(**kwargs) if cls is not None else None
+
+
+def _pallas_call_kwargs(**kwargs):
+    """Drop compiler_params when the compat shim found no class."""
+    if kwargs.get("compiler_params") is None:
+        kwargs.pop("compiler_params", None)
+    return kwargs
 
 
 def _gf2mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k_tiles: int):
@@ -74,17 +104,105 @@ def gf2_matmul(
 
     out = pl.pallas_call(
         functools.partial(_gf2mm_kernel, n_k_tiles=n_k_tiles),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, t: (i, t)),
-            pl.BlockSpec((bk, bn), lambda i, j, t: (t, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        **_pallas_call_kwargs(
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, t: (i, t)),
+                pl.BlockSpec((bk, bn), lambda i, j, t: (t, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel", "arbitrary"),
+            ),
+            interpret=interpret,
         ),
-        interpret=interpret,
     )(a_p, b_p)
     return out[:M, :N]
+
+
+def _rs_bytes_kernel(a_ref, d_ref, o_ref, *, k: int):
+    """Fused tile: unpack byte strips → GF(2) matmul → repack bytes.
+
+    a_ref: (1, bm, 8k) 0/1 bit-matrix rows for this batch item.
+    d_ref: (1, k, bn) raw data bytes (the whole contraction dim at once —
+           k ≤ 256 so 8k ≤ 2048 columns fit comfortably in VMEM).
+    o_ref: (1, bm // 8, bn) raw output bytes.
+    """
+    a = a_ref[0].astype(jnp.bfloat16)  # (bm, 8k)
+    d = d_ref[0]  # (k, bn) uint8
+    bm = a.shape[0]
+    bn = d.shape[1]
+
+    # Unpack LSB-first bitplanes in-register: row 8i+b of planes is bit b of
+    # data row i, matching gf256.bytes_to_bitplanes.
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (k, 8, bn), dimension=1)
+    planes = (d[:, None, :].astype(jnp.int32) >> shifts) & 1
+    planes = planes.reshape(8 * k, bn).astype(jnp.bfloat16)
+
+    # 0/1 matmul, exact in bf16 operands / fp32 accumulation (sums ≤ 2048).
+    acc = jnp.dot(a, planes, preferred_element_type=jnp.float32)
+    bits = acc.astype(jnp.int32) & 1  # (bm, bn) mod-2 epilogue
+
+    # Repack: output byte row i collects plane rows 8i..8i+7.
+    oshift = jax.lax.broadcasted_iota(jnp.int32, (bm // 8, 8, bn), dimension=1)
+    packed = jnp.sum(bits.reshape(bm // 8, 8, bn) << oshift, axis=1)
+    o_ref[0] = packed.astype(o_ref.dtype)
+
+
+def gf2_rs_matmul_bytes(
+    bitmats: jax.Array,
+    data: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched fused RS matmul on raw bytes.
+
+    bitmats: (batch, 8m, 8k) 0/1 — per-item GF(2)-expanded coding matrices
+             (parity rows for encode, inverted generator rows for decode).
+    data:    (batch, k, B) uint8 — raw byte strips.
+    Returns  (batch, m, B) uint8: the GF(256) product rows, bytes in / bytes
+    out, pack/unpack fused into the kernel (no separate bitplane pass).
+
+    batch, m and B should be pre-bucketed by the caller (repro.coding.codec)
+    so heterogeneous (n, k) streams reuse a small set of compilations.
+    """
+    if bitmats.ndim != 3 or data.ndim != 3:
+        raise ValueError(f"bad ranks {bitmats.shape} / {data.shape}")
+    batch, M, K8 = bitmats.shape
+    _, k, B = data.shape
+    if K8 != 8 * k or M % 8 or data.shape[0] != batch:
+        raise ValueError(f"inconsistent shapes {bitmats.shape} / {data.shape}")
+
+    bm = min(block_m, M)
+    bn = min(block_n, B)
+    Mp = -(-M // bm) * bm
+    Bp = -(-B // bn) * bn
+    if Mp != M:
+        bitmats = jnp.concatenate(
+            [bitmats, jnp.zeros((batch, Mp - M, K8), bitmats.dtype)], axis=1
+        )
+    if Bp != B:
+        data = jnp.concatenate([data, jnp.zeros((batch, k, Bp - B), data.dtype)], axis=2)
+
+    grid = (batch, Mp // bm, Bp // bn)
+    out = pl.pallas_call(
+        functools.partial(_rs_bytes_kernel, k=k),
+        **_pallas_call_kwargs(
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bm, K8), lambda b, i, j: (b, i, 0)),
+                pl.BlockSpec((1, k, bn), lambda b, i, j: (b, 0, j)),
+            ],
+            out_specs=pl.BlockSpec((1, bm // 8, bn), lambda b, i, j: (b, i, j)),
+            out_shape=jax.ShapeDtypeStruct((batch, Mp // 8, Bp), jnp.uint8),
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel", "parallel"),
+            ),
+            interpret=interpret,
+        ),
+    )(bitmats, data)
+    return out[:, : M // 8, :B]

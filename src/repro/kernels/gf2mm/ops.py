@@ -1,82 +1,67 @@
 """Jit'd user-facing ops over the gf2mm Pallas kernel.
 
-``rs_encode`` / ``rs_decode`` are the bulk encode/decode entry points used
-by the erasure-coded checkpoint writer (repro.ckpt): the GF(256) generator /
-decode matrices are expanded to GF(2) bit matrices on the host (tiny, trace
-time), the payload bit-planes are produced with vectorized shifts, and the
-heavy lifting is one MXU matmul.
+Thin compatibility wrappers around the unified batched codec engine
+(:mod:`repro.coding.codec`) pinned to the ``pallas`` backend: this module
+used to be one of three divergent encode call-paths (alongside the numpy
+oracle in ``rs.py`` and the layout's own path); it now just routes
+single-codeword calls through the shared engine, inheriting its shape-
+bucketed jit caching and the fused bitplane pack/unpack kernel.
+
+``REPRO_PALLAS_INTERPRET=1`` (default in CPU containers) runs the kernel in
+interpret mode; flip to 0 on real TPUs.
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.coding import gf256, rs
-from repro.kernels.gf2mm import ref
-from repro.kernels.gf2mm.gf2mm import gf2_matmul
+from repro.coding.codec import default_pallas_interpret
 
-# interpret=True everywhere in this container (CPU); on real TPU this flag
-# flips to False via REPRO_PALLAS_INTERPRET=0.
-import os
-
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+INTERPRET = default_pallas_interpret()
 
 
-@functools.partial(jax.jit, static_argnames=("n", "k", "interpret"))
+def _codec(interpret: bool):
+    from repro.coding.codec import get_codec
+
+    return get_codec("pallas", interpret=interpret)
+
+
 def rs_encode(data: jax.Array, *, n: int, k: int, interpret: bool = INTERPRET) -> jax.Array:
     """Systematic RS encode on TPU: (k, B) uint8 -> (n, B) uint8.
 
     Data rows pass through; parity rows come from the GF(2) bit-matrix
-    matmul kernel.
+    matmul kernel (batched engine, batch of one).
     """
     if data.shape[0] != k:
         raise ValueError(f"data rows {data.shape[0]} != k {k}")
-    if n == k:
-        return data
-    parity_g = rs.cauchy_parity_matrix(n, k)  # (n-k, k) GF(256), host const
-    g2 = jnp.asarray(gf256.expand_bitmatrix(parity_g), jnp.uint8)  # (8(n-k), 8k)
-    d2 = ref.bytes_to_bitplanes_ref(data)  # (8k, B)
-    p2 = gf2_matmul(g2, d2, interpret=interpret)  # (8(n-k), B) 0/1
-    parity = ref.bitplanes_to_bytes_ref(p2)  # (n-k, B)
-    return jnp.concatenate([data.astype(jnp.uint8), parity], axis=0)
+    return jnp.asarray(_codec(interpret).encode(data, n, k))
 
 
-@functools.partial(jax.jit, static_argnames=("n", "k", "present", "interpret"))
 def rs_decode(
     rows: jax.Array, *, n: int, k: int, present: tuple[int, ...], interpret: bool = INTERPRET
 ) -> jax.Array:
     """Reconstruct (k, B) data from k surviving strips via the same kernel.
 
-    ``present`` (static) selects the decode matrix; decode is just encode
-    with the inverted generator submatrix.
+    ``present`` selects the decode matrix; decode is just encode with the
+    inverted generator submatrix (a traced input to the bucketed kernel).
     """
     if rows.shape[0] != k:
         raise ValueError(f"rows {rows.shape[0]} != k {k}")
-    dec = rs.decode_matrix(n, k, present)  # (k, k) GF(256), host const
-    d2 = jnp.asarray(gf256.expand_bitmatrix(dec), jnp.uint8)  # (8k, 8k)
-    r2 = ref.bytes_to_bitplanes_ref(rows)  # (8k, B)
-    out_planes = gf2_matmul(d2, r2, interpret=interpret)
-    return ref.bitplanes_to_bytes_ref(out_planes)
+    present = tuple(int(i) for i in present)
+    return jnp.asarray(_codec(interpret).decode(rows, present, n, k))
 
 
 def encode_blob(payload: np.ndarray, *, n: int, k: int) -> np.ndarray:
     """Host convenience: 1-D uint8 payload -> (n, ceil(len/k)) coded strips."""
-    payload = np.asarray(payload, np.uint8).reshape(-1)
-    strip = -(-payload.size // k)
-    buf = np.zeros(k * strip, np.uint8)
-    buf[: payload.size] = payload
-    return np.asarray(rs_encode(jnp.asarray(buf.reshape(k, strip)), n=n, k=k))
+    return _codec(INTERPRET).encode_blob(np.asarray(payload, np.uint8), n=n, k=k)
 
 
 def decode_blob(
     strips: np.ndarray, present: tuple[int, ...], *, n: int, k: int, payload_len: int
 ) -> np.ndarray:
     """Host convenience: any k strips (k, strip) + ids -> payload bytes."""
-    out = np.asarray(
-        rs_decode(jnp.asarray(strips, jnp.uint8), n=n, k=k, present=tuple(int(i) for i in present))
+    return _codec(INTERPRET).decode_blob(
+        strips, tuple(int(i) for i in present), n=n, k=k, payload_len=payload_len
     )
-    return out.reshape(-1)[:payload_len]

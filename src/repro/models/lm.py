@@ -248,7 +248,7 @@ def decode_step(params, cfg: ModelConfig, token, cache):
         x = x + out
         h = ly.rmsnorm(p["ln2"], x)
         if cfg.n_experts:
-            mlp_out, _ = moe_mod.moe_mlp(p["moe"], cfg, h)
+            mlp_out, _ = moe_mod.moe_mlp(p["moe"], cfg, h, dropless=True)
         else:
             mlp_out = ly.mlp(p["mlp"], cfg, h)
         return x + mlp_out, (ck, cv, sp)
@@ -296,7 +296,9 @@ def prefill(params, cfg: ModelConfig, batch, max_seq: int | None = None):
         x = constrain(x, "batch", "seq_sp", None)
         h = ly.rmsnorm(p["ln2"], x)
         if cfg.n_experts:
-            mlp_out, _ = moe_mod.moe_mlp(p["moe"], cfg, h)
+            # Inference: dropless routing, so decode (S=1, can never drop)
+            # reproduces prefill continuations token-exactly.
+            mlp_out, _ = moe_mod.moe_mlp(p["moe"], cfg, h, dropless=True)
         else:
             mlp_out = ly.mlp(p["mlp"], cfg, h)
         x = x + mlp_out

@@ -53,11 +53,30 @@ def moe_logical_axes(cfg: ModelConfig):
     return p
 
 
-def moe_mlp(params, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """x: (B, S, d) → (B, S, d), aux loss. Dispatch is per batch row."""
+def moe_mlp(
+    params, cfg: ModelConfig, x: jax.Array, *, dropless: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) → (B, S, d), aux loss. Dispatch is per batch row.
+
+    ``dropless=True`` sizes per-row capacity at its tight upper bound C = S
+    (a token contributes each expert at most once), so no token is ever
+    dropped. Inference paths (prefill / decode) use this: capacity dropping
+    is a *training-time* load-balancing economy, and at S=1 a decode step
+    can never drop — so prefill must not drop either, or teacher-forcing
+    decode-vs-prefill parity breaks on exactly the overflowed tokens.
+
+    Cost note: dropless dispatch buffers are (B, E, S, d) — roughly
+    E/(K·capacity_factor) × the capacity-bounded path — so long-context
+    prefill pays dense worst-case slots for a sparse dispatch. A
+    sort/segment-based dropless dispatch removes that overhead (ROADMAP
+    open item); at decode (S=1) the two paths cost the same.
+    """
     B, S, d = x.shape
     E, K = cfg.n_experts, cfg.top_k
-    C = max(1, int(math.ceil(cfg.capacity_factor * S * K / E)))
+    if dropless:
+        C = S
+    else:
+        C = max(1, int(math.ceil(cfg.capacity_factor * S * K / E)))
 
     gates = (x.astype(jnp.float32) @ params["router"])  # (B, S, E)
     probs = jax.nn.softmax(gates, axis=-1)
@@ -86,22 +105,23 @@ def moe_mlp(params, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.Arra
     buf = buf[:, :, :C]  # (B, E, C, d)
     buf = constrain(buf, "batch", "experts", None, None)
 
-    # Expert FFN over slots; d_ff TP-sharded over "model".
+    # Expert FFN over slots; d_ff TP-sharded over "model". Contractions
+    # accumulate in fp32 (MXU-native); operands stay in cfg.dtype.
     wi = use_weight(cfg, params["wi"], None, None, "ff")
-    h = jnp.einsum("becd,edf->becf", buf, wi)
+    h = jnp.einsum("becd,edf->becf", buf, wi, preferred_element_type=jnp.float32)
     if cfg.glu:
         wg = use_weight(cfg, params["wg"], None, None, "ff")
-        g = jnp.einsum("becd,edf->becf", buf, wg)
+        g = jnp.einsum("becd,edf->becf", buf, wg, preferred_element_type=jnp.float32)
         h = _act(cfg, g) * h
     else:
         h = _act(cfg, h)
-    h = constrain(h, "batch", "experts", None, "ff")
+    h = constrain(h, "batch", "experts", None, "ff").astype(x.dtype)
     wo = use_weight(cfg, params["wo"], None, "ff", None)
-    y = jnp.einsum("becf,efd->becd", h, wo)  # (B, E, C, d)
+    y = jnp.einsum("becf,efd->becd", h, wo, preferred_element_type=jnp.float32)
 
-    # Combine: gather each choice's slot, weight, sum over K choices.
+    # Combine in fp32: gather each choice's slot, weight, sum over K.
     y = jnp.concatenate([y, jnp.zeros((B, E, 1, d), y.dtype)], axis=2)
-    yt = y[b_idx, flat_i, slot]  # (B, T', d)
-    yt = yt * (topw.reshape(B, S * K)[..., None] * keep[..., None]).astype(yt.dtype)
-    out = yt.reshape(B, S, K, d).sum(axis=2)
+    yt = y[b_idx, flat_i, slot]  # (B, T', d) fp32
+    yt = yt * (topw.reshape(B, S * K)[..., None] * keep[..., None])
+    out = yt.reshape(B, S, K, d).sum(axis=2).astype(x.dtype)
     return constrain(out, "batch", None, None), aux

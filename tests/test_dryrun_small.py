@@ -31,6 +31,9 @@ def _run_py(code: str, devices: int = 8) -> str:
 def test_scan_flops_counted_once_and_unroll_corrects():
     out = _run_py("""
         import jax, jax.numpy as jnp
+        # same normalization as repro.launch.dryrun.cost_dict (that module
+        # must not be imported here: it forces 512 host devices on import)
+        def cost_dict(ca): return (ca[0] if ca else {}) if isinstance(ca, (list, tuple)) else ca
         def body(c, _): return c @ c, None
         def f(unroll):
             def g(x):
@@ -38,8 +41,8 @@ def test_scan_flops_counted_once_and_unroll_corrects():
                 return y
             return g
         x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
-        rolled = jax.jit(f(False)).lower(x).compile().cost_analysis()["flops"]
-        unrolled = jax.jit(f(True)).lower(x).cost_analysis()["flops"]
+        rolled = cost_dict(jax.jit(f(False)).lower(x).compile().cost_analysis())["flops"]
+        unrolled = cost_dict(jax.jit(f(True)).lower(x).cost_analysis())["flops"]
         print(f"RATIO {unrolled / rolled}")
     """)
     ratio = float(out.split("RATIO ")[1])

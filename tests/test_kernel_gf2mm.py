@@ -6,8 +6,7 @@ Sweeps shapes, block sizes and dtypes per the kernel-test contract.
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.coding import gf256, rs
 from repro.kernels.gf2mm import gf2mm, ops, ref

@@ -24,7 +24,9 @@ import numpy as np
 from benchmarks.common import BenchTimer
 from repro.coding import rs
 from repro.coding.codec import Codec
+from repro.core import PAPER_READ_3MB, RequestClass, TOFECPolicy
 from repro.kernels.gf2mm import gf2mm, ops, ref
+from repro.serve import FusedServingStep
 
 
 def bench_gf2mm(n: int = 12, k: int = 6, B: int = 16384) -> list[str]:
@@ -97,6 +99,72 @@ def bench_codec_sweep(B: int = 4096) -> list[str]:
     return rows
 
 
+def bench_fused_serve(B: int = 4096, reps: int = 5) -> list[str]:
+    """Fused vs unfused TOFEC serving step across batch sizes and backends.
+
+    Fused: ONE jitted launch runs the admission update (tofec_step_jax) and
+    the batched decode of the whole round. Unfused: the pre-fused serving
+    path — a host policy update plus one ``codec.decode`` launch per object.
+    The acceptance bar (ISSUE 2): fused ≥ 1.5x unfused at batch ≥ 8 on the
+    jnp backend. Pallas runs in interpret mode on CPU, so its wall-clock is
+    the reference environment, not TPU perf.
+    """
+    cls = RequestClass("bench", 1.0, PAPER_READ_3MB, k_max=6, r_max=2.0, n_max=12)
+    n, k = 12, 6
+    rng = np.random.default_rng(11)
+    rows_out: list[str] = []
+    for backend in ("jnp", "pallas"):
+        codec = Codec(backend)
+        step = FusedServingStep.for_class(cls, L=16, codec=codec)
+        policy = TOFECPolicy.for_classes([cls], L=16)
+        for batch in (1, 8, 32):
+            data = rng.integers(0, 256, size=(batch, k, B), dtype=np.uint8)
+            coded = np.stack([rs.encode(data[i], n, k) for i in range(batch)])
+            present = np.stack([np.sort(rng.choice(n, size=k, replace=False))
+                                for _ in range(batch)])
+            strips = np.stack([coded[i][present[i]] for i in range(batch)])
+
+            def fused_once():
+                out, _ = step.decode_batch(strips, present, n=n, k=k, q=batch)
+                return out
+
+            def unfused_once():
+                outs = []
+                for i in range(batch):
+                    policy.select(q=batch, idle=0)
+                    outs.append(np.asarray(
+                        codec.decode(strips[i], tuple(present[i]), n, k)))
+                return np.stack(outs)
+
+            # warm both paths (compilation outside the timed region)
+            np.testing.assert_array_equal(fused_once(), data)
+            np.testing.assert_array_equal(unfused_once(), data)
+
+            t0 = time.monotonic()
+            for _ in range(reps):
+                fused_once()
+            dt_fused = (time.monotonic() - t0) / reps
+
+            t0 = time.monotonic()
+            for _ in range(reps):
+                unfused_once()
+            dt_unfused = (time.monotonic() - t0) / reps
+
+            mb = batch * k * B / 2**20
+            speedup = dt_unfused / max(dt_fused, 1e-9)
+            # dt_fused is already a per-call average, so calls=1 here.
+            timer = BenchTimer(f"fused_serve_{backend}_n{n}k{k}_b{batch}", calls=1)
+            timer.elapsed = dt_fused
+            rows_out.append(
+                timer.row(
+                    f"fused={mb / dt_fused:.1f}MB/s"
+                    f"|unfused={mb / dt_unfused:.1f}MB/s"
+                    f"|speedup={speedup:.2f}x"
+                )
+            )
+    return rows_out
+
+
 def bench_ckpt_encode(leaf_mb: int = 1) -> list[str]:
     rng = np.random.default_rng(1)
     payload = rng.integers(0, 256, size=leaf_mb * 2**20, dtype=np.uint8)
@@ -111,4 +179,4 @@ def bench_ckpt_encode(leaf_mb: int = 1) -> list[str]:
     return [t.row(f"encode_{leaf_mb}MB@{mbps:.1f}MB/s"), t2.row("decode_ok")]
 
 
-ALL_KERNEL = [bench_gf2mm, bench_codec_sweep, bench_ckpt_encode]
+ALL_KERNEL = [bench_gf2mm, bench_codec_sweep, bench_fused_serve, bench_ckpt_encode]

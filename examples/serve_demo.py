@@ -4,6 +4,13 @@ Prompts live in the emulated store as Shared-Key coded objects; the proxy
 fetches them with adaptive (n, k) ranged reads under an S3-like latency
 model, tolerating injected read failures; the LM then prefills + decodes.
 
+The fetch runs twice: once on the unfused path (the proxy batch-decodes
+completions per admission round on the host codec) and once through the
+fused serving step — one jitted launch running the TOFEC admission update
+AND the batched MDS decode for the whole round. The fused step's codec
+backend follows ``REPRO_CODEC_BACKEND`` when that names a jitted backend
+(jnp / pallas) and falls back to jnp otherwise.
+
 Run:  PYTHONPATH=src python examples/serve_demo.py
 """
 
@@ -12,11 +19,12 @@ import dataclasses
 import jax
 import numpy as np
 
+from repro.coding.codec import get_codec
 from repro.coding.layout import SharedKeyLayout
 from repro.configs.qwen1_5_0_5b import CONFIG as QWEN
 from repro.core import PAPER_READ_3MB, RequestClass, TOFECPolicy
 from repro.models.registry import Arch, _FAMILY_MODULES
-from repro.serve import ServingEngine
+from repro.serve import FusedServingStep, ServingEngine
 from repro.storage import FaultyStore, LatencyStore, MemoryStore, Proxy
 from repro.storage.proxy import store_coded_object
 
@@ -46,6 +54,10 @@ def main():
 
     cls = RequestClass("prompt", prompt_len * 4 / 2**20, PAPER_READ_3MB,
                        k_max=4, r_max=2.0, n_max=8)
+    codec = get_codec()
+    if not codec.backend.jitted:  # numpy default is host-only; fuse on jnp
+        codec = get_codec("jnp")
+    fused = FusedServingStep.for_class(cls, L=8, codec=codec)
     proxy = Proxy(store, TOFECPolicy.for_classes([cls], L=8), L=8)
     try:
         res = eng.serve(proxy, layout, keys, prompt_len=prompt_len, steps=8)
@@ -56,6 +68,16 @@ def main():
             print(f"  {key}: ({code[0]},{code[1]})  {d * 1e3:.1f} ms wall")
         print(f"\n15% injected read-failure rate absorbed by erasure coding; "
               f"{sum(r.failures for r in proxy.results)} task failures total")
+
+        fres = eng.serve(proxy, layout, keys, prompt_len=prompt_len, steps=8,
+                         fused=fused)
+        match = np.array_equal(fres.tokens, res.tokens)
+        print(f"\nfused serving step ({codec.name} backend): one jitted launch "
+              f"ran the TOFEC admission update + batched decode of all "
+              f"{len(keys)} prompts")
+        print(f"  tokens match unfused path: {match}")
+        print(f"  controller pick for the next round: (n,k)={fres.next_code}, "
+              f"compiled traces so far: {fused.traces}")
     finally:
         proxy.close()
 

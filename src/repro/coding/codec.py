@@ -117,6 +117,22 @@ class _Backend:
     def matmul(self, mats, data):  # pragma: no cover - interface
         raise NotImplementedError
 
+    def prep_mats(self, mats):
+        """Host-side prep of (already padded) coding matrices into the form
+        :meth:`matmul_traced` consumes — identity for the table backends,
+        GF(2) bit-expansion for pallas. Runs once per admission round on
+        tiny arrays; the result is a valid runtime input to a jitted step."""
+        return mats
+
+    def matmul_traced(self, mats, data):
+        """Trace-safe matmul for use INSIDE an outer ``jax.jit`` (the fused
+        serving step): both operands may be tracers, ``mats`` having been
+        through :meth:`prep_mats`. Host-only backends raise."""
+        raise TypeError(
+            f"codec backend {self.name!r} is host-only; use the jnp or "
+            "pallas backend inside jit-traced code"
+        )
+
     def _fn_for(self, key: tuple, build):
         """Shared-cache lookup; only the dict mutation is locked, so
         concurrent encodes on different (or same) buckets run in parallel."""
@@ -157,11 +173,16 @@ class JnpBackend(_Backend):
         import jax
         import jax.numpy as jnp
 
-        exp = jnp.asarray(gf256.exp_table(), jnp.int32)
-        log = jnp.asarray(gf256.log_table(), jnp.int32)
+        # Keep the tables as host numpy in the closure: _build may run while
+        # an OUTER jit (the fused serving step) is tracing, and any device
+        # array created here would be a tracer leaking into the cached fn.
+        exp_np = gf256.exp_table()
+        log_np = gf256.log_table()
 
         def fn(mats, data):
             self.stats.traces += 1  # runs at trace time only
+            exp = jnp.asarray(exp_np, jnp.int32)
+            log = jnp.asarray(log_np, jnp.int32)
             a = mats.astype(jnp.int32)  # (batch, m, k)
             d = data.astype(jnp.int32)  # (batch, k, B)
             la, ld = log[a], log[d]
@@ -183,6 +204,11 @@ class JnpBackend(_Backend):
         key = (k, mats.shape[0], mats.shape[1], data.shape[2])
         fn = self._fn_for(key, lambda: self._build(k))
         return fn(jnp.asarray(mats), jnp.asarray(data))
+
+    # The log/exp-table formulation is already trace-safe: shapes come from
+    # the (possibly traced) operands and the inner jit inlines under an
+    # outer jit, so the fused serving step reuses the same kernel.
+    matmul_traced = matmul
 
 
 class PallasBackend(_Backend):
@@ -208,15 +234,21 @@ class PallasBackend(_Backend):
 
         return jax.jit(fn)
 
-    def matmul(self, mats, data):
+    def prep_mats(self, mats):
+        """GF(2) bit-expansion (batch, m, k) → (batch, 8m, 8k); host-side."""
+        return gf256.expand_bitmatrix_batched(np.asarray(mats, np.uint8))
+
+    def matmul_traced(self, bitmats, data):
+        """Kernel dispatch on pre-expanded bit-matrices; safe under jit."""
         import jax.numpy as jnp
 
-        mats = np.asarray(mats, np.uint8)  # tiny; expanded host-side
-        batch, m, k = mats.shape
-        bitmats = gf256.expand_bitmatrix_batched(mats)
-        key = (k, batch, m, data.shape[2])
+        k = bitmats.shape[2] // 8
+        key = (k, bitmats.shape[0], bitmats.shape[1] // 8, data.shape[2])
         fn = self._fn_for(key, lambda: self._build(k))
         return fn(jnp.asarray(bitmats), jnp.asarray(data))
+
+    def matmul(self, mats, data):
+        return self.matmul_traced(self.prep_mats(mats), data)
 
 
 class Codec:
@@ -348,23 +380,46 @@ class Codec:
             raise ValueError(f"present must be (k,) or (batch, k), got {present.shape}")
         self.stats.calls += 1
         self.stats.items += batch
-        # Tiny (k, k) inversions on host, cached per (n, k, present) pattern.
-        mats = np.stack(
-            [rs.decode_matrix(n, k, tuple(int(i) for i in present[b])) for b in range(batch)]
-        )
-        out = self._matmul_bucketed("dec", mats, rows, n, k, use_jnp=use_jnp)
+        out = self._matmul_bucketed("dec", self.decode_mats(present, n, k), rows, n, k,
+                                    use_jnp=use_jnp)
         return out[0] if single else out
+
+    def decode_mats(self, present, n: int, k: int) -> np.ndarray:
+        """(batch, k, k) host decode matrices for per-item ``present``
+        patterns — tiny inversions, cached per (n, k, pattern). This is the
+        runtime-matrix input of the fused serving step: built host-side each
+        round, fed to the jitted step as a traced array so erasure-pattern
+        changes never retrace."""
+        present = np.asarray(present, np.int64)
+        if present.ndim == 1:
+            present = present[None]
+        return np.stack(
+            [rs.decode_matrix(n, k, tuple(int(i) for i in p)) for p in present]
+        )
+
+    def pad_to_bucket(self, kind: str, mats: np.ndarray, data, n: int, k: int):
+        """Zero-pad (mats, data) to the shape bucket this call lands in.
+
+        Returns (mats_p, data_p, key) with key = :meth:`bucket_key`'s tuple.
+        The ONE source of truth for bucket padding, shared by the unfused
+        matmul path and the fused serving step (which feeds mats_p through
+        ``backend.prep_mats`` into its own jitted launch); callers slice
+        ``[:batch, :m, :B]`` off the result themselves."""
+        batch, m, _ = mats.shape
+        key = self.bucket_key(kind, n, k, data.shape[2], batch)
+        if not self.backend.jitted:
+            return mats, data, key
+        _, _, m_b, B_b, batch_b = key
+        mats_p = np.zeros((batch_b, m_b, k), np.uint8)
+        mats_p[:batch, :m] = mats
+        return mats_p, self._pad(data, batch_b, B_b), key
 
     def _matmul_bucketed(self, kind, mats, data, n, k, *, use_jnp=False):
         batch, m, _ = mats.shape
         B = data.shape[2]
         if not self.backend.jitted:
             return self.backend.matmul(mats, data)
-        key = self.bucket_key(kind, n, k, B, batch)
-        _, _, m_b, B_b, batch_b = key
-        mats_p = np.zeros((batch_b, m_b, k), np.uint8)
-        mats_p[:batch, :m] = mats
-        data_p = self._pad(data, batch_b, B_b)
+        mats_p, data_p, _ = self.pad_to_bucket(kind, mats, data, n, k)
         out = self.backend.matmul(mats_p, data_p)
         if use_jnp:  # stay in jax-land (traced or device) for the caller
             return out[:batch, :m, :B]

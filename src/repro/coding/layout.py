@@ -15,7 +15,10 @@ Encode/decode route through the unified batched codec engine
 (numpy oracle by default, ``jnp`` / ``pallas`` for bulk batched paths) and
 can be overridden per call. :func:`encode_files` amortizes one kernel
 launch over a whole batch of same-class files — the proxy's write-queue
-drain uses it.
+drain uses it — and :func:`reconstruct_batch` is its read-side mirror: one
+batched decode with per-item ``present`` masks reconstructs a whole
+admission round of completed reads, across heterogeneous chunk levels and
+erasure patterns.
 """
 
 from __future__ import annotations
@@ -123,15 +126,17 @@ class SharedKeyLayout:
         coded = np.asarray(codec.encode(data, self.N, self.K))
         return [coded[i].tobytes() for i in range(len(payloads))]
 
-    def reconstruct(self, k: int, chunks: dict[int, bytes], payload_len: int | None = None,
-                    codec: "codec_mod.Codec | None" = None) -> bytes:
-        """Rebuild the file from any >= k chunk-level fetches at level k.
+    def gather_rows(self, k: int, chunks: dict[int, bytes]) -> tuple[np.ndarray, list[int]]:
+        """(K, b) surviving strip rows + their strip ids from any >= k
+        chunk-level fetches at level k.
 
         ``chunks`` maps chunk index (at level k) -> chunk bytes. Exactly the
         first k (by index order) are used; extras are ignored (they are the
-        redundant tasks the proxy cancels late).
+        redundant tasks the proxy cancels late). Every chunk level yields the
+        same (K, b) row block (k chunks cover k·m = K strips), which is what
+        lets reads served at *different* levels share one batched decode.
         """
-        n_max, _, m = self.code_for_k(k)
+        _, _, m = self.code_for_k(k)
         if len(chunks) < k:
             raise ValueError(f"need >= {k} chunks, got {len(chunks)}")
         use = sorted(chunks)[:k]
@@ -143,10 +148,52 @@ class SharedKeyLayout:
                 raise ValueError(f"chunk {ci}: got {blob.size}B, want {m * self.strip_bytes}B")
             rows[slot * m : (slot + 1) * m] = blob.reshape(m, self.strip_bytes)
             strip_ids.extend(range(ci * m, (ci + 1) * m))
+        return rows, strip_ids
+
+    def gather_rows_batch(
+        self, items: Sequence[tuple[int, dict[int, bytes]]]
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Stack :meth:`gather_rows` over (k_level, chunks) pairs into the
+        (batch, K, b) rows + (batch, K) present arrays one batched decode
+        consumes — shared by :meth:`reconstruct_batch` and the fused serving
+        step's raw-chunk assembly."""
+        rows = np.empty((len(items), self.K, self.strip_bytes), dtype=np.uint8)
+        present = np.empty((len(items), self.K), dtype=np.int64)
+        for i, (k, chunks) in enumerate(items):
+            rows[i], ids = self.gather_rows(k, chunks)
+            present[i] = ids
+        return rows, present
+
+    def reconstruct(self, k: int, chunks: dict[int, bytes], payload_len: int | None = None,
+                    codec: "codec_mod.Codec | None" = None) -> bytes:
+        """Rebuild the file from any >= k chunk-level fetches at level k."""
+        return self.reconstruct_batch([(k, chunks, payload_len)], codec=codec)[0]
+
+    def reconstruct_batch(
+        self,
+        items: Sequence[tuple[int, dict[int, bytes], int | None]],
+        codec: "codec_mod.Codec | None" = None,
+    ) -> list[bytes]:
+        """Rebuild many files of this class in ONE batched decode.
+
+        ``items`` is a sequence of (k_level, chunks, payload_len) triples.
+        All reads of one layout share the strip-level (N, K) code no matter
+        which chunk level k served them, so the whole admission round — with
+        heterogeneous chunk levels *and* heterogeneous erasure patterns —
+        collapses into a single ``codec.decode`` call with per-item
+        ``present`` masks (the proxy's read-side amortization, the mirror of
+        :meth:`encode_files` on the write side).
+        """
+        if not items:
+            return []
+        rows, present = self.gather_rows_batch([(k, c) for k, c, _ in items])
         codec = codec or codec_mod.get_codec()
-        data = np.asarray(codec.decode(rows, tuple(strip_ids), self.N, self.K))
-        out = data.reshape(-1).tobytes()
-        return out if payload_len is None else out[:payload_len]
+        data = np.asarray(codec.decode(rows, present, self.N, self.K))
+        out: list[bytes] = []
+        for i, (_, _, payload_len) in enumerate(items):
+            blob = data[i].reshape(-1).tobytes()
+            out.append(blob if payload_len is None else blob[:payload_len])
+        return out
 
 
 def layout_for_file(file_bytes: int, k_max: int, r_max: int) -> SharedKeyLayout:

@@ -94,6 +94,64 @@ def simulate_tofec_scan(
     return {"total": tot, "queueing": dq, "service": ds, "n": ns, "k": ks}
 
 
+def simulate_tofec_reference(
+    p: JaxSimParams,
+    tables: TofecTables,
+    interarrivals: np.ndarray,
+    exp_draws: np.ndarray,
+) -> dict[str, np.ndarray]:
+    """Pure-Python/numpy mirror of :func:`simulate_tofec_scan`, step for step.
+
+    The regression oracle for the fused serving/scan path: same Lindley
+    recursion, same threshold controller, float32 throughout to match the
+    scan's device arithmetic. Kept dependency-free of jax execution so a
+    silent change in the jitted step (fusion reordering, table handling,
+    controller semantics) shows up as a divergence in
+    ``tests/test_scan_regression.py``.
+    """
+    h_k = np.asarray(tables.h_k, np.float32)
+    h_n = np.asarray(tables.h_n, np.float32)
+    inter = np.asarray(interarrivals, np.float32)
+    exps = np.asarray(exp_draws, np.float32)
+    one = np.float32(1.0)
+    alpha = np.float32(p.alpha)
+    L = np.float32(p.L)
+    ubar = np.float32(_usage(p, np.float32(1.0), np.float32(1.0)))
+    j = np.arange(p.n_max, dtype=np.float32)
+    w = np.float32(0.0)
+    q_ewma = np.float32(0.0)
+    tot, dq_l, ds_l, ns, ks = [], [], [], [], []
+    for dt, e in zip(inter, exps):
+        w = np.maximum(w - dt, np.float32(0.0))
+        q = w * L / ubar
+        q_ewma = alpha * q + (one - alpha) * q_ewma
+        k = 1 + int(np.sum(h_k[1:] > q_ewma))
+        n = 1 + int(np.sum(h_n[1:] > q_ewma))
+        n = max(min(int(np.float32(tables.r_max) * np.float32(k)), n), k)
+        nf, kf = np.float32(n), np.float32(k)
+        r = nf / kf
+        s = np.float32(_usage(p, kf, r)) / L
+        B = np.float32(p.J) / kf
+        denom = np.maximum(nf - j, np.float32(1.0))
+        tail = np.sum(np.where(j < kf, e / denom, np.float32(0.0)), dtype=np.float32)
+        d_s = (np.float32(p.delta_bar) + np.float32(p.delta_tilde) * B) + (
+            np.float32(p.psi_bar) + np.float32(p.psi_tilde) * B
+        ) * tail
+        tot.append(w + d_s)
+        dq_l.append(w)
+        ds_l.append(d_s)
+        ns.append(n)
+        ks.append(k)
+        w = w + s
+    return {
+        "total": np.asarray(tot, np.float32),
+        "queueing": np.asarray(dq_l, np.float32),
+        "service": np.asarray(ds_l, np.float32),
+        "n": np.asarray(ns, np.int32),
+        "k": np.asarray(ks, np.int32),
+    }
+
+
 def run_tofec_scan(
     c: RequestClass,
     tables: TofecTables,

@@ -1,1 +1,1 @@
-from repro.serve.engine import ServeResult, ServingEngine
+from repro.serve.engine import FusedServingStep, ServeResult, ServingEngine

@@ -5,19 +5,179 @@ the TOFEC proxy (erasure-coded ranged reads, adaptive (n, k) from the proxy
 backlog), tokenized prompts are batched, prefilled, and decoded with the
 arch's cached ``decode_step``. The storage path is the paper's system; the
 LM path is the substrate it feeds.
+
+Two fetch paths:
+
+* **unfused** — :meth:`ServingEngine.fetch_prompts` submits the whole round
+  through :meth:`Proxy.read_many`; the proxy batch-decodes completions per
+  admission round on the host codec.
+* **fused** — pass a :class:`FusedServingStep`: the proxy returns raw chunks
+  (``raw=True``) and ONE jitted launch then runs the TOFEC admission update
+  (:func:`repro.core.controller.tofec_step_jax`) *and* the batched MDS
+  decode for the whole round. Admission control and erasure coding share a
+  single compiled step — the serving-path half of the paper's proxy, on the
+  jnp / pallas codec backends (``REPRO_CODEC_BACKEND`` selects which; the
+  numpy backend is host-only and cannot fuse).
+
+Compilation is shape-bucketed exactly like :mod:`repro.coding.codec`
+(powers of two on batch / parity rows / strip width), and the per-item
+decode matrices travel as *runtime* arrays built host-side from the cached
+Cauchy tables — so a heterogeneous stream of codes, erasure patterns and
+batch sizes reuses one trace per shape bucket (asserted in
+``tests/test_fused_serve.py``).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.coding import codec as codec_mod
+from repro.coding import rs
 from repro.coding.layout import SharedKeyLayout
+from repro.core.controller import TofecTables, tofec_step_jax
+from repro.core.static_optimizer import build_class_plan
 from repro.models.registry import Arch
 from repro.storage.proxy import Proxy, store_coded_object
+
+
+class FusedServingStep:
+    """One jitted launch per serving round: TOFEC admission update + batched
+    MDS codec work (encode or decode), fused.
+
+    State: ``q_ewma`` (the controller's backlog EWMA) lives on device and is
+    threaded through successive calls, so the step is the serving-path twin
+    of one :func:`repro.core.jax_sim.simulate_tofec_scan` iteration. Each
+    call returns the payloads *and* the (n, k) the controller picks for the
+    next round.
+
+    Matrices are runtime inputs: decode matrices come from
+    :meth:`Codec.decode_mats` (host-cached per erasure pattern), parity
+    matrices from the cached Cauchy generator, both padded to the shape
+    bucket and run through ``backend.prep_mats`` — so changing the code or
+    the erasure pattern never retraces; only a new shape bucket compiles.
+    """
+
+    def __init__(self, tables: TofecTables, *, codec: codec_mod.Codec | None = None,
+                 alpha: float = 0.99):
+        self.codec = codec or codec_mod.get_codec()
+        if not self.codec.backend.jitted:
+            raise ValueError(
+                f"codec backend {self.codec.name!r} is host-only; the fused "
+                "serving step needs the jnp or pallas backend (select via "
+                "REPRO_CODEC_BACKEND or get_codec('jnp'))"
+            )
+        self.tables = tables
+        self.alpha = alpha
+        self.traces = 0  # outer-jit compilations (bounded by shape buckets)
+        self._fns: dict[tuple, object] = {}
+        self._lock = threading.Lock()
+        self.q_ewma = jnp.float32(0.0)
+
+    @classmethod
+    def for_class(cls, request_class, L: int, *, codec: codec_mod.Codec | None = None,
+                  alpha: float = 0.99, eq7_factor: float = 2.0) -> "FusedServingStep":
+        plan = build_class_plan(request_class, L, eq7_factor=eq7_factor)
+        return cls(TofecTables.from_plan(plan), codec=codec, alpha=alpha)
+
+    def reset(self) -> None:
+        self.q_ewma = jnp.float32(0.0)
+
+    # -- compilation cache ---------------------------------------------------
+
+    def _fn(self, key: tuple):
+        with self._lock:
+            fn = self._fns.get(key)
+        if fn is not None:
+            return fn
+        backend = self.codec.backend
+        tables, alpha = self.tables, self.alpha
+        kind = key[0]
+
+        if kind == "adm":  # admission update only (n == k: no parity work)
+
+            def fused(q_ewma, q):
+                self.traces += 1  # runs at trace time only
+                return tofec_step_jax(q_ewma, q, tables, alpha)
+
+        elif kind == "dec":
+
+            def fused(mats, rows, q_ewma, q):
+                self.traces += 1  # runs at trace time only
+                q_new, n_nxt, k_nxt = tofec_step_jax(q_ewma, q, tables, alpha)
+                return q_new, n_nxt, k_nxt, backend.matmul_traced(mats, rows)
+
+        else:
+
+            def fused(mats, data, q_ewma, q):
+                self.traces += 1  # runs at trace time only
+                q_new, n_nxt, k_nxt = tofec_step_jax(q_ewma, q, tables, alpha)
+                parity = backend.matmul_traced(mats, data)
+                return q_new, n_nxt, k_nxt, jnp.concatenate([data, parity], axis=1)
+
+        fn = jax.jit(fused)
+        with self._lock:
+            fn = self._fns.setdefault(key, fn)
+        return fn
+
+    # -- fused entry points ----------------------------------------------------
+
+    def decode_batch(self, rows, present, *, n: int, k: int, q: float
+                     ) -> tuple[np.ndarray, tuple[int, int]]:
+        """Admission update + batched reconstruct in ONE jitted launch.
+
+        rows: (batch, k, B) surviving strips; present: (batch, k) strip ids
+        (or a shared (k,) pattern); q: the round's backlog signal. Returns
+        ((batch, k, B) decoded data, (n, k) for the next round).
+        """
+        rows = np.asarray(rows, np.uint8)
+        single = rows.ndim == 2
+        if single:
+            rows = rows[None]
+        batch, _, B = rows.shape
+        present = np.asarray(present, np.int64)
+        if present.ndim == 1:
+            present = np.broadcast_to(present, (batch, k))
+        mats = self.codec.decode_mats(present, n, k)
+        mats_p, rows_p, key = self.codec.pad_to_bucket("dec", mats, rows, n, k)
+        fn = self._fn(key)
+        self.q_ewma, n_nxt, k_nxt, out = fn(
+            jnp.asarray(self.codec.backend.prep_mats(mats_p)), jnp.asarray(rows_p),
+            self.q_ewma, jnp.float32(q),
+        )
+        data = np.asarray(out)[:batch, :k, :B]
+        return (data[0] if single else data), (int(n_nxt), int(k_nxt))
+
+    def encode_batch(self, data, *, n: int, k: int, q: float
+                     ) -> tuple[np.ndarray, tuple[int, int]]:
+        """Admission update + batched systematic encode in ONE launch.
+
+        data: (batch, k, B) → ((batch, n, B) coded strips, next (n, k)).
+        """
+        data = np.asarray(data, np.uint8)
+        single = data.ndim == 2
+        if single:
+            data = data[None]
+        batch, _, B = data.shape
+        if n == k:  # no parity: admission update only, data passes through
+            fn = self._fn(("adm",))
+            self.q_ewma, n_nxt, k_nxt = fn(self.q_ewma, jnp.float32(q))
+            return (data[0] if single else data), (int(n_nxt), int(k_nxt))
+        m = n - k
+        par = rs.cauchy_parity_matrix(n, k)
+        mats = np.broadcast_to(par, (batch, m, k))
+        mats_p, data_p, key = self.codec.pad_to_bucket("enc", mats, data, n, k)
+        fn = self._fn(key)
+        self.q_ewma, n_nxt, k_nxt, out = fn(
+            jnp.asarray(self.codec.backend.prep_mats(mats_p)), jnp.asarray(data_p),
+            self.q_ewma, jnp.float32(q),
+        )
+        coded = np.asarray(out)[:batch, :n, :B]
+        return (coded[0] if single else coded), (int(n_nxt), int(k_nxt))
 
 
 @dataclasses.dataclass
@@ -25,6 +185,7 @@ class ServeResult:
     tokens: np.ndarray  # (B, steps) generated ids
     storage_total_s: list[float]  # per-request proxy read delays
     codes: list[tuple[int, int]]  # (n, k) used per prompt fetch
+    next_code: tuple[int, int] | None = None  # fused path: controller's pick
 
 
 class ServingEngine:
@@ -44,17 +205,50 @@ class ServingEngine:
         store_coded_object(store, key, layout, tokens.astype(np.int32).tobytes())
 
     def fetch_prompts(
-        self, proxy: Proxy, layout: SharedKeyLayout, keys: list[str], prompt_len: int
-    ) -> tuple[np.ndarray, list[float], list[tuple[int, int]]]:
-        toks, delays, codes = [], [], []
-        for key in keys:
-            res = proxy.read(key, layout, payload_len=prompt_len * 4)
-            if not res.ok:
-                raise RuntimeError(f"prompt fetch failed for {key}")
-            toks.append(np.frombuffer(res.data, np.int32))
-            delays.append(res.total_s)
-            codes.append((res.n, res.k))
-        return np.stack(toks), delays, codes
+        self, proxy: Proxy, layout: SharedKeyLayout, keys: list[str], prompt_len: int,
+        *, fused: FusedServingStep | None = None, retries: int = 3,
+    ) -> tuple[np.ndarray, list[float], list[tuple[int, int]], tuple[int, int] | None]:
+        """Batched prompt fetch: the whole round is submitted up front (the
+        proxy's policy sees it as backlog) and reconstructed batched — by the
+        proxy's admission round (unfused) or by ``fused``'s single jitted
+        admission+decode launch (raw chunks in, payloads out).
+
+        Reads that exhaust their n − k failure budget (the backlog-adapted
+        code can be as lean as (1, 1)) are resubmitted up to ``retries``
+        times; the retry round is smaller, so the policy re-picks with more
+        redundancy. Reported delays accumulate across attempts (what the
+        client actually waited); codes report the attempt that served."""
+        payload_len = prompt_len * 4
+        raw = fused is not None
+        results = proxy.read_many(keys, layout, payload_len, raw=raw)
+        failed_s = [0.0] * len(keys)
+        for _ in range(retries):
+            bad_idx = [i for i, r in enumerate(results) if not r.ok]
+            if not bad_idx:
+                break
+            for i in bad_idx:
+                failed_s[i] += results[i].total_s
+            redo = proxy.read_many([keys[i] for i in bad_idx], layout, payload_len,
+                                   raw=raw)
+            for i, r in zip(bad_idx, redo):
+                results[i] = r
+        bad = [k for k, r in zip(keys, results) if not r.ok]
+        if bad:
+            raise RuntimeError(f"prompt fetch failed for {', '.join(bad)}")
+        delays = [r.total_s + extra for r, extra in zip(results, failed_s)]
+        codes = [(r.n, r.k) for r in results]
+        if fused is None:
+            toks = [np.frombuffer(r.data, np.int32) for r in results]
+            return np.stack(toks), delays, codes, None
+        rows, present = layout.gather_rows_batch([(r.k, r.chunks) for r in results])
+        data, next_code = fused.decode_batch(
+            rows, present, n=layout.N, k=layout.K, q=len(keys)
+        )
+        toks = [
+            np.frombuffer(data[i].reshape(-1)[:payload_len].tobytes(), np.int32)
+            for i in range(len(results))
+        ]
+        return np.stack(toks), delays, codes, next_code
 
     # -- generation -----------------------------------------------------------
 
@@ -88,7 +282,11 @@ class ServingEngine:
         *,
         prompt_len: int,
         steps: int,
+        fused: FusedServingStep | None = None,
     ) -> ServeResult:
-        prompts, delays, codes = self.fetch_prompts(proxy, layout, keys, prompt_len)
+        prompts, delays, codes, next_code = self.fetch_prompts(
+            proxy, layout, keys, prompt_len, fused=fused
+        )
         gen = self.generate(prompts, steps)
-        return ServeResult(tokens=gen, storage_total_s=delays, codes=codes)
+        return ServeResult(tokens=gen, storage_total_s=delays, codes=codes,
+                           next_code=next_code)

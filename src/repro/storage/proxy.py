@@ -16,18 +16,31 @@ Writes encode k chunks into n, upload each as a part, and complete when any
 k parts are durable (the paper's write model; remaining uploads become
 background tasks, footnote 1). All n parts target the same multipart object.
 
-Write encoding goes through the unified batched codec engine: each admission
-round drains every queued write and encodes all same-layout payloads with
-ONE batched :meth:`SharedKeyLayout.encode_files` call, amortizing kernel
-launch + trace cost across the backlog (the coding-overhead Ψ cap of FAST
-CLOUD §IV). The admission *rule* (inject the next request's tasks only when
-the task queue is drained and a thread idles) is unchanged — batching moves
-encode off the per-request critical path, not the paper's queueing model.
+Coding on BOTH directions of the hot path goes through the unified batched
+codec engine, amortized per admission round (the coding-overhead Ψ cap of
+FAST CLOUD §IV):
+
+* writes — each round drains every queued write and encodes all same-layout
+  payloads with ONE batched :meth:`SharedKeyLayout.encode_files` call;
+* reads — completed reads accumulate (workers only collect chunks and hand
+  the finished request to the admit loop) and each round reconstructs the
+  whole accumulation with ONE batched :meth:`SharedKeyLayout.reconstruct_batch`
+  call, per-item ``present`` masks carrying each request's own erasure
+  pattern and chunk level through a single ``codec.decode``.
+
+The admission *rule* (inject the next request's tasks only when the task
+queue is drained and a thread idles) is unchanged — batching moves coding
+off the per-request critical path, not the paper's queueing model. Callers
+that want the raw chunks instead (e.g. the fused serving step in
+:mod:`repro.serve.engine`, which decodes *inside* its jitted step) pass
+``raw=True``; those requests skip proxy-side decode and return their
+surviving chunks + indices in :attr:`RequestResult.chunks`.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import logging
 import queue as _queue
 import threading
 import time
@@ -39,6 +52,12 @@ from repro.coding import codec as codec_mod
 from repro.coding.layout import SharedKeyLayout
 from repro.core.controller import Policy
 from repro.storage.backend import ObjectStore, StorageError
+
+
+_log = logging.getLogger(__name__)
+
+#: admit-loop wakeup marker: a completed read is waiting for batched decode.
+_WAKE = object()
 
 
 @dataclasses.dataclass
@@ -53,6 +72,8 @@ class RequestResult:
     t_first_start: float
     t_done: float
     failures: int = 0
+    #: raw reads only: surviving chunk index -> chunk bytes (data stays None)
+    chunks: dict[int, bytes] | None = None
 
     @property
     def total_s(self) -> float:
@@ -68,7 +89,7 @@ class RequestResult:
 
 
 class _Request:
-    def __init__(self, op, key, layout, payload, payload_len, n, k, cls_id):
+    def __init__(self, op, key, layout, payload, payload_len, n, k, cls_id, raw=False):
         self.op = op
         self.key = key
         self.layout: SharedKeyLayout = layout
@@ -77,6 +98,7 @@ class _Request:
         self.n = n
         self.k = k
         self.cls_id = cls_id
+        self.raw = raw
         self.t_arrival = time.monotonic()
         self.t_first_start = None
         self.done = threading.Event()
@@ -99,6 +121,9 @@ class Proxy:
         self.codec = codec or codec_mod.get_codec()
         self._task_q: _queue.Queue = _queue.Queue()
         self._request_q: _queue.Queue = _queue.Queue()
+        # Completed (non-raw) reads awaiting the admission round's ONE
+        # batched reconstruct; fed by workers, drained by the admit loop.
+        self._decode_q: _queue.Queue = _queue.Queue()
         self._idle = L
         # Requests the admit loop has drained but not yet injected: still
         # queued from the policy's point of view (TOFEC's q signal).
@@ -118,12 +143,37 @@ class Proxy:
     # -- public API ---------------------------------------------------------
 
     def read(self, key: str, layout: SharedKeyLayout, payload_len: int | None = None,
-             cls_id: int = 0, timeout: float = 60.0) -> RequestResult:
-        req = self._submit("read", key, layout, None, payload_len, cls_id)
+             cls_id: int = 0, timeout: float = 60.0, *, raw: bool = False) -> RequestResult:
+        return self.wait(self.read_async(key, layout, payload_len, cls_id, raw=raw), timeout)
+
+    def read_async(self, key: str, layout: SharedKeyLayout, payload_len: int | None = None,
+                   cls_id: int = 0, *, raw: bool = False) -> _Request:
+        """Submit a read without blocking; pair with :meth:`wait`.
+
+        ``raw=True`` skips proxy-side decode: the result carries the
+        surviving chunks + indices (for callers that decode in their own
+        batched/fused step).
+        """
+        return self._submit("read", key, layout, None, payload_len, cls_id, raw=raw)
+
+    @staticmethod
+    def wait(req: _Request, timeout: float = 60.0) -> RequestResult:
         req.done.wait(timeout)
         if req.result is None:
-            raise TimeoutError(f"read {key} timed out")
+            raise TimeoutError(f"{req.op} {req.key} timed out")
         return req.result
+
+    def read_many(self, keys: list[str], layout: SharedKeyLayout,
+                  payload_len: int | None = None, *, cls_id: int = 0,
+                  raw: bool = False, timeout: float = 60.0) -> list[RequestResult]:
+        """Batched fetch: submit every key up front, then collect.
+
+        Submitting the whole round before waiting lets the policy see the
+        true backlog (TOFEC's q signal) and lets the admit loop reconstruct
+        the completions in batched decode calls instead of one per request.
+        """
+        reqs = [self.read_async(k, layout, payload_len, cls_id, raw=raw) for k in keys]
+        return [self.wait(r, timeout) for r in reqs]
 
     def write(self, key: str, layout: SharedKeyLayout, payload: bytes,
               cls_id: int = 0, timeout: float = 60.0) -> RequestResult:
@@ -141,7 +191,7 @@ class Proxy:
 
     # -- internals ----------------------------------------------------------
 
-    def _submit(self, op, key, layout, payload, payload_len, cls_id) -> _Request:
+    def _submit(self, op, key, layout, payload, payload_len, cls_id, raw=False) -> _Request:
         with self._state_lock:
             q_len = self._request_q.qsize() + self._admit_backlog
             idle = self._idle
@@ -150,7 +200,7 @@ class Proxy:
         k = max(kk for kk in layout.supported_k() if kk <= k)
         n_max, _, _ = layout.code_for_k(k)
         n = max(k, min(n, n_max))
-        req = _Request(op, key, layout, payload, payload_len, n, k, cls_id)
+        req = _Request(op, key, layout, payload, payload_len, n, k, cls_id, raw=raw)
         self._request_q.put(req)
         return req
 
@@ -160,20 +210,28 @@ class Proxy:
             if not pending:
                 req = self._request_q.get()
                 if req is None:
-                    return
+                    break
+                if req is _WAKE:  # a read completed while we were idle
+                    self._flush_completed_reads()
+                    continue
                 pending.append(req)
             # Drain everything else that already arrived, then batch-encode
-            # all queued writes in one codec call per layout class.
+            # all queued writes (and batch-decode all completed reads) in one
+            # codec call per layout class.
             while True:
                 try:
                     req = self._request_q.get_nowait()
                 except _queue.Empty:
                     break
                 if req is None:
+                    self._flush_completed_reads()
                     return
+                if req is _WAKE:
+                    continue
                 pending.append(req)
             with self._state_lock:
                 self._admit_backlog = len(pending)
+            self._flush_completed_reads()
             self._encode_pending_writes(pending)
             req = pending.popleft()
             with self._state_lock:
@@ -185,8 +243,53 @@ class Proxy:
                     ready = self._idle > 0 and self._task_q.empty()
                 if ready:
                     break
+                self._flush_completed_reads()  # decode while tasks drain
                 time.sleep(1e-4)
             self._inject(req)
+        self._flush_completed_reads()
+
+    def _flush_completed_reads(self) -> None:
+        """One batched reconstruct per layout group of completed reads.
+
+        This is the read-side twin of :meth:`_encode_pending_writes`: all
+        reads that finished since the last round — any mix of chunk levels
+        and erasure patterns — decode in a single ``codec.decode`` per
+        layout via per-item ``present`` masks.
+        """
+        reqs: list[_Request] = []
+        while True:
+            try:
+                reqs.append(self._decode_q.get_nowait())
+            except _queue.Empty:
+                break
+        if not reqs:
+            return
+        groups: dict[SharedKeyLayout, list[_Request]] = {}
+        for r in reqs:
+            groups.setdefault(r.layout, []).append(r)
+        for lay, group in groups.items():
+            try:
+                datas = lay.reconstruct_batch(
+                    [(r.k, r.completed, r.payload_len) for r in group], codec=self.codec
+                )
+            except Exception as batch_err:
+                # Torn batch (e.g. one malformed chunk): fall back to
+                # per-request decode so one bad item can't wedge the rest.
+                _log.warning("batched reconstruct failed (%s); retrying "
+                             "per-request", batch_err)
+                for r in group:
+                    try:
+                        data = lay.reconstruct(r.k, r.completed, r.payload_len,
+                                               codec=self.codec)
+                        self._finish(r, True, data=data)
+                    except Exception:
+                        _log.exception("reconstruct failed for read %r "
+                                       "(k=%d, chunks=%s)", r.key, r.k,
+                                       sorted(r.completed))
+                        self._finish(r, False)
+                continue
+            for r, data in zip(group, datas):
+                self._finish(r, True, data=data)
 
     def _encode_pending_writes(self, pending: "deque[_Request]") -> None:
         """One batched encode per (layout-class) group of queued writes."""
@@ -252,16 +355,29 @@ class Proxy:
                 req.failures += 1
             if len(req.completed) >= req.k:
                 req.cancelled = True  # preemptive cancellation of the rest
-                self._finish(req, True)
+                if req.op == "read" and not req.raw:
+                    # Hand off to the admit loop: the round's completions
+                    # reconstruct together in one batched decode.
+                    self._decode_q.put(req)
+                    self._request_q.put(_WAKE)
+                    if self._shutdown:
+                        # The admit loop may already have done its final
+                        # flush; decode inline so the waiter isn't stranded.
+                        self._flush_completed_reads()
+                else:
+                    self._finish(req, True)
             elif req.failures > req.n - req.k:
                 req.cancelled = True
                 self._finish(req, False)
 
-    def _finish(self, req: _Request, ok: bool):
-        data = None
+    def _finish(self, req: _Request, ok: bool, data: bytes | None = None):
+        chunks = None
         if ok and req.op == "read":
-            data = req.layout.reconstruct(req.k, req.completed, req.payload_len,
-                                          codec=self.codec)
+            if req.raw:
+                chunks = dict(req.completed)
+            elif data is None:  # direct callers bypassing the admit loop
+                data = req.layout.reconstruct(req.k, req.completed, req.payload_len,
+                                              codec=self.codec)
         elif ok and req.op == "write":
             # k parts durable → request complete (footnote 1: the rest could
             # continue in background; here they are cancelled).
@@ -277,6 +393,7 @@ class Proxy:
             t_first_start=req.t_first_start or time.monotonic(),
             t_done=time.monotonic(),
             failures=req.failures,
+            chunks=chunks,
         )
         self.results.append(req.result)
         req.done.set()

@@ -1,0 +1,149 @@
+"""Fused jitted serving step: one launch = TOFEC admission update + batched
+codec work. Correctness vs the host oracle/policy, bounded retracing across
+heterogeneous codes and batch sizes, and the engine's batched fetch path."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.coding import rs
+from repro.coding.codec import Codec, pow2_bucket
+from repro.coding.layout import SharedKeyLayout
+from repro.core import PAPER_READ_3MB, RequestClass, StaticPolicy, TOFECPolicy
+from repro.models import get
+from repro.serve import FusedServingStep, ServingEngine
+from repro.storage import MemoryStore, Proxy
+
+CLS = RequestClass("read3mb", 3.0, PAPER_READ_3MB, k_max=6, r_max=2.0, n_max=12)
+L = 16
+JIT_BACKENDS = ["jnp", "pallas"]
+
+
+def _erased(rng, data, n, k):
+    batch = data.shape[0]
+    coded = np.stack([rs.encode(data[i], n, k) for i in range(batch)])
+    present = np.stack([rng.permutation(n)[:k] for _ in range(batch)])
+    rows = np.stack([coded[i][present[i]] for i in range(batch)])
+    return coded, present, rows
+
+
+@pytest.mark.parametrize("backend", JIT_BACKENDS)
+def test_fused_decode_matches_oracle_and_policy(backend):
+    step = FusedServingStep.for_class(CLS, L, codec=Codec(backend))
+    policy = TOFECPolicy.for_classes([CLS], L)
+    rng = np.random.default_rng(0)
+    n, k = 12, 6
+    for q, batch, B in [(0, 3, 100), (4, 5, 57), (30, 2, 128)]:
+        data = rng.integers(0, 256, size=(batch, k, B), dtype=np.uint8)
+        _, present, rows = _erased(rng, data, n, k)
+        got, next_code = step.decode_batch(rows, present, n=n, k=k, q=q)
+        np.testing.assert_array_equal(got, data)
+        # The in-jit controller tracks the host policy's EWMA + thresholds.
+        assert next_code == policy.select(q=q, idle=0)
+
+
+@pytest.mark.parametrize("backend", JIT_BACKENDS)
+def test_fused_encode_matches_oracle(backend):
+    step = FusedServingStep.for_class(CLS, L, codec=Codec(backend))
+    rng = np.random.default_rng(1)
+    for n, k, batch, B in [(12, 6, 4, 64), (5, 3, 2, 200), (3, 3, 2, 40)]:
+        data = rng.integers(0, 256, size=(batch, k, B), dtype=np.uint8)
+        coded, next_code = step.encode_batch(data, n=n, k=k, q=1.0)
+        want = np.stack([rs.encode(data[i], n, k) for i in range(batch)])
+        np.testing.assert_array_equal(coded, want)
+        assert next_code[0] >= next_code[1] >= 1
+
+
+def test_fused_step_requires_jitted_backend():
+    with pytest.raises(ValueError, match="host-only"):
+        FusedServingStep.for_class(CLS, L, codec=Codec("numpy"))
+
+
+def test_fused_step_retrace_bounded_across_codes_and_batches():
+    """A heterogeneous stream of (n, k) codes, erasure patterns and batch
+    sizes compiles at most once per shape bucket: codes + patterns travel as
+    runtime matrices, never as trace constants."""
+    step = FusedServingStep.for_class(CLS, L, codec=Codec("jnp"))
+    rng = np.random.default_rng(2)
+    stream = [
+        (n, k, batch, Bw)
+        for k in (2, 4)
+        for n in (k, k + 1, 2 * k)
+        for batch in (1, 3, 8)
+        for Bw in (33, 120)
+    ]
+    buckets = set()
+    calls = 0
+    for n, k, batch, Bw in stream * 2:  # second pass must be compile-free
+        data = rng.integers(0, 256, size=(batch, k, Bw), dtype=np.uint8)
+        _, present, rows = _erased(rng, data, n, k)
+        got, _ = step.decode_batch(rows, present, n=n, k=k, q=float(batch))
+        np.testing.assert_array_equal(got, data)
+        calls += 1
+        buckets.add(("dec", k, pow2_bucket(k), pow2_bucket(Bw, Codec.B_FLOOR),
+                     pow2_bucket(batch)))
+        if n > k:
+            coded, _ = step.encode_batch(data, n=n, k=k, q=float(batch))
+            calls += 1
+            buckets.add(("enc", k, pow2_bucket(n - k), pow2_bucket(Bw, Codec.B_FLOOR),
+                         pow2_bucket(batch)))
+    assert step.traces <= len(buckets), (
+        f"{step.traces} fused compilations for {len(buckets)} shape buckets"
+    )
+    assert calls > 2 * len(buckets)  # sanity: far fewer compiles than calls
+
+
+def test_fused_ewma_state_threads_across_calls():
+    """q_ewma persists on device between rounds: repeated heavy-q rounds walk
+    the controller from max chunking down to (1, 1), like the host policy."""
+    step = FusedServingStep.for_class(CLS, L, codec=Codec("jnp"))
+    policy = TOFECPolicy.for_classes([CLS], L)
+    rng = np.random.default_rng(3)
+    n, k = 12, 6
+    data = rng.integers(0, 256, size=(2, k, 64), dtype=np.uint8)
+    _, present, rows = _erased(rng, data, n, k)
+    codes_fused, codes_host = [], []
+    for q in [0, 0, 40, 40, 40, 0, 0, 0]:
+        _, nxt = step.decode_batch(rows, present, n=n, k=k, q=q)
+        codes_fused.append(nxt)
+        codes_host.append(policy.select(q=q, idle=0))
+    assert codes_fused == codes_host
+    assert codes_fused[1] == (12, 6) and codes_fused[4] == (1, 1)
+    step.reset()
+    _, nxt = step.decode_batch(rows, present, n=n, k=k, q=0)
+    assert nxt == (12, 6)
+
+
+def test_engine_fused_fetch_matches_unfused_end_to_end():
+    arch = get("qwen1.5-0.5b", smoke=True)
+    params = arch.init(jax.random.key(1))
+    eng = ServingEngine(arch, params, max_seq=64)
+
+    prompt_len = 16
+    layout = SharedKeyLayout(K=4, r=2, strip_bytes=prompt_len)
+    store = MemoryStore()
+    rng = np.random.default_rng(4)
+    keys, truth = [], []
+    for i in range(4):
+        toks = rng.integers(0, arch.cfg.vocab, size=(prompt_len,)).astype(np.int32)
+        key = f"prompt/{i}"
+        ServingEngine.store_prompt(store, key, layout, toks)
+        keys.append(key)
+        truth.append(toks)
+
+    cls = RequestClass("prompt", prompt_len * 4 / 2**20, PAPER_READ_3MB,
+                       k_max=4, r_max=2.0, n_max=8)
+    fused = FusedServingStep.for_class(cls, L=8, codec=Codec("jnp"))
+    proxy = Proxy(store, StaticPolicy(4, 2), L=8)
+    try:
+        res = eng.serve(proxy, layout, keys, prompt_len=prompt_len, steps=4)
+        fres = eng.serve(proxy, layout, keys, prompt_len=prompt_len, steps=4,
+                         fused=fused)
+        assert res.next_code is None and fres.next_code is not None
+        np.testing.assert_array_equal(fres.tokens, res.tokens)
+        direct = eng.generate(np.stack(truth), steps=4)
+        np.testing.assert_array_equal(fres.tokens, direct)
+        assert all(c == (4, 2) for c in fres.codes)
+    finally:
+        proxy.close()

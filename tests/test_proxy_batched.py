@@ -1,0 +1,145 @@
+"""Proxy batched read path: admission-round decode, raw reads, and the
+paper's heavy-load adaptation (backlog pressure → fewer/larger chunks)."""
+
+import threading
+
+import numpy as np
+
+from repro.coding.layout import SharedKeyLayout
+from repro.core import PAPER_READ_3MB, RequestClass, StaticPolicy, TOFECPolicy
+from repro.storage import FaultyStore, MemoryStore, Proxy, store_coded_object
+
+LAYOUT = SharedKeyLayout(K=6, r=2, strip_bytes=128)
+
+
+class _GatedStore(MemoryStore):
+    """Deterministic fake store: ranged reads block until the gate opens,
+    with a controllable post-gate delay. Lets a test pile up a backlog of
+    known size before ANY task completes."""
+
+    def __init__(self):
+        super().__init__()
+        self.gate = threading.Event()
+        self.range_calls = 0
+        self._count_lock = threading.Lock()
+
+    def get_range(self, key, offset, length):
+        self.gate.wait()
+        with self._count_lock:
+            self.range_calls += 1
+        return super().get_range(key, offset, length)
+
+
+def _payloads(rng, count, nbytes):
+    return [rng.integers(0, 256, size=nbytes, dtype=np.uint8).tobytes() for _ in range(count)]
+
+
+def test_read_many_batch_decodes_heterogeneous_erasures():
+    """One round of concurrent reads with random per-item failures: every
+    item reconstructs despite each surviving a different erasure pattern
+    (the admission round's single batched decode path)."""
+    rng = np.random.default_rng(0)
+    inner = MemoryStore()
+    payloads = _payloads(rng, 8, LAYOUT.file_bytes - 11)
+    keys = []
+    for i, p in enumerate(payloads):
+        store_coded_object(inner, f"obj/{i}", LAYOUT, p)
+        keys.append(f"obj/{i}")
+    store = FaultyStore(inner, p_fail=0.15, seed=1)
+    proxy = Proxy(store, StaticPolicy(12, 6), L=8)
+    try:
+        results = proxy.read_many(keys, LAYOUT, payload_len=len(payloads[0]))
+        assert all(r.ok for r in results)
+        for r, p in zip(results, payloads):
+            assert r.data == p
+    finally:
+        proxy.close()
+
+
+def test_raw_read_returns_chunks_for_external_decode():
+    """raw=True skips proxy decode; the chunks round-trip through the
+    layout's own reconstruct (what the fused serving step does in-jit)."""
+    rng = np.random.default_rng(2)
+    store = MemoryStore()
+    payload = _payloads(rng, 1, LAYOUT.file_bytes)[0]
+    store_coded_object(store, "raw/0", LAYOUT, payload)
+    proxy = Proxy(store, StaticPolicy(6, 3), L=4)
+    try:
+        res = proxy.read("raw/0", LAYOUT, payload_len=len(payload), raw=True)
+        assert res.ok and res.data is None
+        assert res.chunks is not None and len(res.chunks) >= res.k
+        got = LAYOUT.reconstruct(res.k, res.chunks, payload_len=len(payload))
+        assert got == payload
+    finally:
+        proxy.close()
+
+
+def test_mixed_chunk_levels_share_one_admission_round():
+    """Reads admitted at different k levels all reconstruct correctly via
+    the per-item present masks of the shared (N, K) strip code."""
+    rng = np.random.default_rng(3)
+    inner = MemoryStore()
+    payloads = _payloads(rng, 6, LAYOUT.file_bytes)
+    keys = []
+    for i, p in enumerate(payloads):
+        store_coded_object(inner, f"mix/{i}", LAYOUT, p)
+        keys.append(f"mix/{i}")
+
+    class _CyclePolicy(StaticPolicy):
+        """Cycles the chunk level so one round mixes k = 6, 3, 2, 1."""
+
+        def __init__(self):
+            super().__init__(12, 6)
+            self._cycle = [(12, 6), (6, 3), (4, 2), (2, 1), (3, 3), (2, 2)]
+            self._i = 0
+
+        def select(self, *, q, idle, cls_id=0, now=None):
+            out = self._cycle[self._i % len(self._cycle)]
+            self._i += 1
+            return out
+
+    proxy = Proxy(inner, _CyclePolicy(), L=8)
+    try:
+        results = proxy.read_many(keys, LAYOUT, payload_len=LAYOUT.file_bytes)
+        assert all(r.ok for r in results)
+        assert sorted({r.k for r in results}) == [1, 2, 3, 6]
+        for r, p in zip(results, payloads):
+            assert r.data == p
+    finally:
+        proxy.close()
+
+
+def test_backlog_pressure_shifts_code_toward_fewer_chunks():
+    """The paper's heavy-load behavior on the real-I/O proxy: as the gated
+    backlog builds, TOFEC picks fewer/larger chunks (k drops from k_max
+    toward 1), deterministically — selection happens at submission time
+    while the store blocks every task."""
+    rng = np.random.default_rng(4)
+    store = _GatedStore()
+    count = 24
+    payloads = _payloads(rng, count, LAYOUT.file_bytes)
+    keys = []
+    for i, p in enumerate(payloads):
+        store_coded_object(store, f"load/{i}", LAYOUT, p)
+        keys.append(f"load/{i}")
+
+    cls = RequestClass("gated", LAYOUT.file_bytes / 2**20, PAPER_READ_3MB,
+                       k_max=6, r_max=2.0, n_max=12)
+    proxy = Proxy(store, TOFECPolicy.for_classes([cls], L=8), L=8)
+    try:
+        # Submit the whole backlog while the store admits nothing.
+        reqs = [proxy.read_async(k, LAYOUT, payload_len=LAYOUT.file_bytes) for k in keys]
+        store.gate.set()
+        results = [proxy.wait(r, timeout=60.0) for r in reqs]
+        assert all(r.ok for r in results)
+        for r, p in zip(results, payloads):
+            assert r.data == p
+        ks = [r.k for r in results]
+        assert ks[0] == 6  # empty queue → max chunking (light-load optimum)
+        assert ks[-1] == 1  # deep backlog → no chunking (heavy-load optimum)
+        # Monotone non-increasing in submission order: the EWMA only grows
+        # while the gate is closed (modulo the one-in-flight admission slot).
+        assert all(b <= a + 1 for a, b in zip(ks, ks[1:]))
+        assert {1, 6} <= set(ks)
+    finally:
+        proxy.close()

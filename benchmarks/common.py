@@ -53,6 +53,21 @@ def rate_grid(n: int = 8, lo_frac: float = 0.1, hi_frac: float = 0.92):
     return np.linspace(lo_frac * CAPACITY_BASIC, hi_frac * CAPACITY_BASIC, n)
 
 
+_FLEET_SWEEP = None
+
+
+def fleet_sweep():
+    """Process-wide :class:`repro.fleet.FleetSweep` so every figure's
+    λ-sweep shares one compilation cache (lazy: keeps jax out of the
+    import path of the event-sim-only benches)."""
+    global _FLEET_SWEEP
+    if _FLEET_SWEEP is None:
+        from repro.fleet import FleetSweep
+
+        _FLEET_SWEEP = FleetSweep(chunk=64)
+    return _FLEET_SWEEP
+
+
 def fresh_tofec(alpha: float = 0.99) -> TOFECPolicy:
     return TOFECPolicy.for_classes([CLS], L, alpha=alpha)
 

@@ -165,6 +165,74 @@ def bench_fused_serve(B: int = 4096, reps: int = 5) -> list[str]:
     return rows_out
 
 
+def bench_fleet_sweep(count: int = 1024, grids: tuple = (8, 64, 256)) -> list[str]:
+    """Vmapped fleet sweep vs the serial host loop at grid sizes {8, 64, 256}.
+
+    The serial baseline dispatches one jitted ``simulate_tofec_scan`` per
+    grid point (the pre-fleet λ-sweep shape); the fleet runs the same grid
+    as chunked vmapped launches. At grid 8 the discrete-event simulator is
+    also timed for scale (the original Fig.1/7 inner loop — why the fleet
+    subsystem exists).
+    """
+    from repro.core.controller import TofecTables
+    from repro.core.jax_sim import JaxSimParams, simulate_tofec_scan
+    from repro.core.simulator import poisson_arrivals, simulate
+    from repro.core.static_optimizer import build_class_plan
+    from repro.core.traces import TraceSampler
+    from repro.fleet import FleetSweep, PolicySpec, grid_cases
+
+    cls = RequestClass("read3mb", 3.0, PAPER_READ_3MB, k_max=6, r_max=2.0, n_max=12)
+    L = 16
+    tables = TofecTables.from_plan(build_class_plan(cls, L))
+    p = JaxSimParams.from_class(cls, L)
+    sampler = TraceSampler(PAPER_READ_3MB, cls.file_mb)
+    sweep = FleetSweep(chunk=64)
+    rows: list[str] = []
+    for grid in grids:
+        lams = np.linspace(5.0, 65.0, max(grid // 8, 1))
+        seeds = range(-(-grid // len(lams)))  # pad seeds so len(cases) >= grid
+        cases = grid_cases(lams, [PolicySpec.tofec()], seeds, cls, L)[:grid]
+
+        sweep.run(cases, count)  # warm the shape bucket (compile + workloads)
+        t0 = time.monotonic()
+        res = sweep.run(cases, count)
+        jax.block_until_ready(res.out)  # async dispatch: sync before stopping
+        dt_fleet = time.monotonic() - t0
+
+        # Serial host loop: one jitted scan dispatch per point, same draws.
+        simulate_tofec_scan(p, tables, *map(jnp.asarray, _point_arrays(cases[0], count)))
+        t0 = time.monotonic()
+        for case in cases:
+            inter, exps = _point_arrays(case, count)
+            simulate_tofec_scan(p, tables, jnp.asarray(inter), jnp.asarray(exps))[
+                "total"
+            ].block_until_ready()
+        dt_serial = time.monotonic() - t0
+
+        derived = (f"serial_scan={1e3 * dt_serial:.1f}ms"
+                   f"|speedup={dt_serial / max(dt_fleet, 1e-9):.2f}x"
+                   f"|launches={res.launches}|compiles={res.compiles}")
+        if grid <= 8:
+            t0 = time.monotonic()
+            for case in cases:
+                rng = np.random.default_rng(case.seed)
+                arr = poisson_arrivals(rng, case.lam, count)
+                simulate(TOFECPolicy.for_classes([cls], L), arr, sampler, L=L,
+                         seed=case.seed)
+            dt_event = time.monotonic() - t0
+            derived += (f"|event_sim={1e3 * dt_event:.1f}ms"
+                        f"|vs_event={dt_event / max(dt_fleet, 1e-9):.1f}x")
+        timer = BenchTimer(f"fleet_sweep_g{grid}_t{count}", calls=1)
+        timer.elapsed = dt_fleet
+        rows.append(timer.row(derived))
+    return rows
+
+
+def _point_arrays(case, count: int):
+    rng = np.random.default_rng(case.seed)
+    return case.resolved_workload().device_arrays(rng, count, case.cls.n_max)
+
+
 def bench_ckpt_encode(leaf_mb: int = 1) -> list[str]:
     rng = np.random.default_rng(1)
     payload = rng.integers(0, 256, size=leaf_mb * 2**20, dtype=np.uint8)
@@ -179,4 +247,10 @@ def bench_ckpt_encode(leaf_mb: int = 1) -> list[str]:
     return [t.row(f"encode_{leaf_mb}MB@{mbps:.1f}MB/s"), t2.row("decode_ok")]
 
 
-ALL_KERNEL = [bench_gf2mm, bench_codec_sweep, bench_fused_serve, bench_ckpt_encode]
+ALL_KERNEL = [
+    bench_gf2mm,
+    bench_codec_sweep,
+    bench_fused_serve,
+    bench_fleet_sweep,
+    bench_ckpt_encode,
+]

@@ -9,6 +9,7 @@ from repro.core.controller import (
     TofecTables,
     TOFECPolicy,
     tofec_step_jax,
+    tofec_threshold_step,
 )
 from repro.core.delay_model import (
     PAPER_READ_3MB,
@@ -38,6 +39,7 @@ __all__ = [
     "FixedKAdaptivePolicy",
     "TofecTables",
     "tofec_step_jax",
+    "tofec_threshold_step",
     "ClassPlan",
     "build_class_plan",
     "optimal_static_code",

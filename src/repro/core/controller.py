@@ -193,6 +193,30 @@ class TofecTables:
         return cls(h_k=h_k, h_n=h_n, r_max=plan.cls.r_max)
 
 
+def tofec_threshold_step(
+    q_ewma: jax.Array,
+    q: jax.Array,
+    h_k: jax.Array,
+    h_n: jax.Array,
+    r_max,
+    alpha,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Table-free form of the TOFEC update: every argument may be a tracer.
+
+    Unlike :func:`tofec_step_jax` this takes the threshold tables and the
+    redundancy cap as plain (possibly traced) arrays, so the fleet sweep can
+    ``vmap`` it across a stacked policy axis where ``r_max`` varies per grid
+    point. Trailing zero entries in ``h_k``/``h_n`` are inert (0 > q̄ never
+    holds for q̄ ≥ 0), which is what makes cross-class table padding safe.
+    """
+    q_new = alpha * q + (1.0 - alpha) * q_ewma
+    k = 1 + jnp.sum(h_k[1:] > q_new).astype(jnp.int32)
+    n = 1 + jnp.sum(h_n[1:] > q_new).astype(jnp.int32)
+    n = jnp.minimum((r_max * k).astype(jnp.int32), n)
+    n = jnp.maximum(n, k)
+    return q_new, n, k
+
+
 def tofec_step_jax(
     q_ewma: jax.Array, q: jax.Array, tables: TofecTables, alpha: float
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -201,12 +225,7 @@ def tofec_step_jax(
     Same semantics as :class:`TOFECPolicy.select` (threshold search =
     1 + #{h > q̄} over the descending tables).
     """
-    q_new = alpha * q + (1.0 - alpha) * q_ewma
-    k = 1 + jnp.sum(tables.h_k[1:] > q_new).astype(jnp.int32)
-    n = 1 + jnp.sum(tables.h_n[1:] > q_new).astype(jnp.int32)
-    n = jnp.minimum((tables.r_max * k).astype(jnp.int32), n)
-    n = jnp.maximum(n, k)
-    return q_new, n, k
+    return tofec_threshold_step(q_ewma, q, tables.h_k, tables.h_n, tables.r_max, alpha)
 
 
 class MPCPolicy(Policy):

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.controller import TofecTables, tofec_step_jax
+from repro.core.controller import TofecTables, tofec_threshold_step
 from repro.core.delay_model import DelayParams, RequestClass
 
 
@@ -49,14 +49,60 @@ def _usage(p: JaxSimParams, k, r):
     return p.delta_bar * k * r + p.delta_tilde * p.J * r + p.psi_bar * k + p.psi_tilde * p.J
 
 
-def _service_delay(p: JaxSimParams, k, n, exps):
+def _service_delay(p, k, n, exps, n_max: int):
     """Δ(B) + (1/μ(B)) Σ_{j<k} E_j/(n−j); exps: (n_max,) Exp(1) draws."""
     B = p.J / k
-    j = jnp.arange(p.n_max, dtype=jnp.float32)
+    j = jnp.arange(n_max, dtype=jnp.float32)
     mask = j < k
     denom = jnp.maximum(n - j, 1.0)
     tail = jnp.sum(jnp.where(mask, exps / denom, 0.0))
     return (p.delta_bar + p.delta_tilde * B) + (p.psi_bar + p.psi_tilde * B) * tail
+
+
+def tofec_scan_core(
+    p,
+    h_k: jax.Array,
+    h_n: jax.Array,
+    r_max,
+    interarrivals: jax.Array,
+    exp_draws: jax.Array,
+    *,
+    n_max: int,
+) -> dict[str, jax.Array]:
+    """Traceable single-config scan body shared by the jitted entry point and
+    the fleet sweep.
+
+    ``p`` is any object exposing the :class:`JaxSimParams` float fields
+    (``delta_bar``/``delta_tilde``/``psi_bar``/``psi_tilde``/``J``/``L``/
+    ``alpha``); those fields, the threshold tables and ``r_max`` may all be
+    tracers — :mod:`repro.fleet.sweep` vmaps this function over a stacked
+    (λ × policy × seed) axis. Only ``n_max`` (the ``exp_draws`` width) must
+    be static.
+    """
+
+    # Mean usage at the basic code — scale factor for the q-length proxy.
+    ubar_hint = _usage(p, 1.0, 1.0)
+
+    def step(carry, inp):
+        w, q_ewma = carry  # w: virtual waiting work (seconds of queue wait)
+        dt, exps = inp
+        w = jnp.maximum(w - dt, 0.0)
+        # Queue length proxy upon arrival: waiting work / mean service time
+        # (Little's law over the L fluid lanes).
+        q_ewma, n_i, k_i = tofec_threshold_step(
+            q_ewma, w * p.L / ubar_hint, h_k, h_n, r_max, p.alpha
+        )
+        nf, kf = n_i.astype(jnp.float32), k_i.astype(jnp.float32)
+        r = nf / kf
+        s = _usage(p, kf, r) / p.L
+        d_q = w
+        d_s = _service_delay(p, kf, nf, exps, n_max)
+        w = w + s
+        return (w, q_ewma), (d_q + d_s, d_q, d_s, n_i, k_i)
+
+    init = (jnp.float32(0.0), jnp.float32(0.0))
+    (_, _), (tot, dq, ds, ns, ks) = jax.lax.scan(step, init, (interarrivals, exp_draws))
+    return {"total": tot, "queueing": dq, "service": ds, "n": ns, "k": ks}
 
 
 @functools.partial(jax.jit, static_argnames=("p",))
@@ -70,28 +116,10 @@ def simulate_tofec_scan(
 
     Returns per-request total delay, queueing delay, service delay, n, k.
     """
-
-    # Mean usage at the basic code — scale factor for the q-length proxy.
-    ubar_hint = _usage(p, 1.0, 1.0)
-
-    def step(carry, inp):
-        w, q_ewma = carry  # w: virtual waiting work (seconds of queue wait)
-        dt, exps = inp
-        w = jnp.maximum(w - dt, 0.0)
-        # Queue length proxy upon arrival: waiting work / mean service time
-        # (Little's law over the L fluid lanes).
-        q_ewma, n_i, k_i = tofec_step_jax(q_ewma, w * p.L / ubar_hint, tables, p.alpha)
-        nf, kf = n_i.astype(jnp.float32), k_i.astype(jnp.float32)
-        r = nf / kf
-        s = _usage(p, kf, r) / p.L
-        d_q = w
-        d_s = _service_delay(p, kf, nf, exps)
-        w = w + s
-        return (w, q_ewma), (d_q + d_s, d_q, d_s, n_i, k_i)
-
-    init = (jnp.float32(0.0), jnp.float32(0.0))
-    (_, _), (tot, dq, ds, ns, ks) = jax.lax.scan(step, init, (interarrivals, exp_draws))
-    return {"total": tot, "queueing": dq, "service": ds, "n": ns, "k": ks}
+    return tofec_scan_core(
+        p, tables.h_k, tables.h_n, tables.r_max, interarrivals, exp_draws,
+        n_max=p.n_max,
+    )
 
 
 def simulate_tofec_reference(

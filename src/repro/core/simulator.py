@@ -214,15 +214,13 @@ def poisson_arrivals(rng: np.random.Generator, lam: float, count: int) -> np.nda
 def piecewise_poisson_arrivals(
     rng: np.random.Generator, rates: list[tuple[float, float]]
 ) -> np.ndarray:
-    """Arrivals for consecutive (duration_s, rate) segments (Fig.10 setup)."""
-    out = []
-    t0 = 0.0
-    for dur, lam in rates:
-        t = t0
-        while True:
-            t += rng.exponential(1.0 / lam)
-            if t >= t0 + dur:
-                break
-            out.append(t)
-        t0 += dur
-    return np.asarray(out)
+    """Arrivals for consecutive (duration_s, rate) segments (Fig.10 setup).
+
+    .. deprecated:: use :class:`repro.fleet.workloads.PiecewiseWorkload`
+       directly — this is now a thin wrapper kept for source compatibility
+       (draw-for-draw identical RNG consumption). The fleet workload family
+       also yields device-ready interarrival arrays from the same spec.
+    """
+    from repro.fleet.workloads import PiecewiseWorkload
+
+    return PiecewiseWorkload(tuple(rates)).arrival_times(rng)

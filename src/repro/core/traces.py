@@ -17,11 +17,30 @@ re-estimates {Δ̄, Δ̃, Ψ̄, Ψ̃} exactly the way §V-A does.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
-from scipy import stats
+
+try:  # dev-only dependency (requirements-dev.txt); the erf fallback below
+    from scipy import stats as _scipy_stats  # keeps minimal containers working
+except ImportError:  # pragma: no cover - exercised on minimal containers
+    _scipy_stats = None
 
 from repro.core.delay_model import DelayParams
+
+_SQRT2 = math.sqrt(2.0)
+_vec_erf = np.vectorize(math.erf, otypes=[np.float64])
+
+
+def _norm_cdf(z: np.ndarray) -> np.ndarray:
+    """Standard-normal CDF; scipy when available, math.erf otherwise.
+
+    Φ(z) = (1 + erf(z/√2))/2 — exact, just slower elementwise on the
+    fallback path, which only runs where scipy isn't installed.
+    """
+    if _scipy_stats is not None:
+        return _scipy_stats.norm.cdf(z)
+    return 0.5 * (1.0 + _vec_erf(np.asarray(z) / _SQRT2))
 
 
 def _corr_exponentials(
@@ -33,7 +52,7 @@ def _corr_exponentials(
     cov = np.full((n, n), rho)
     np.fill_diagonal(cov, 1.0)
     z = rng.multivariate_normal(np.zeros(n), cov, size=size, method="cholesky")
-    u = stats.norm.cdf(z)
+    u = _norm_cdf(z)
     u = np.clip(u, 1e-12, 1.0 - 1e-12)
     return -mean * np.log1p(-u)
 

@@ -1,0 +1,371 @@
+"""Vmapped fleet sweep: a whole (λ × policy × seed) grid per jitted launch.
+
+One grid point = one :func:`repro.core.jax_sim.tofec_scan_core` run. The
+sweep stacks every per-point quantity — delay-model params, threshold
+tables, redundancy cap, arrival/exponential draws — along a leading grid
+axis and ``vmap``s the scan core over it, so a 256-point λ-sweep costs a
+handful of launches instead of 256 serial ones.
+
+Uniformity across the grid is manufactured, not assumed:
+
+* **Policies as tables.** The scan's controller is the threshold form
+  ``1 + #{h > q̄}``; :func:`static_tables` and :func:`fixedk_tables` encode
+  static (n, k) codes and the fixed-k adaptive strategy of [3] into the
+  same (h_k, h_n, r_max) triple (sentinel-``BIG``/0 thresholds pin the
+  choice), so heterogeneous policy mixes ride one vmapped launch.
+* **Shape-bucketed jit caching.** Following the ``Codec.pad_to_bucket``
+  convention, compiled sweeps are keyed on (chunk, pow2-bucketed T, n_max,
+  table lengths); trailing-zero threshold padding and zero-gap arrival
+  padding are semantically inert (outputs are sliced back), so
+  heterogeneous grids compile once per bucket — asserted in
+  ``tests/test_fleet.py``.
+* **Memory-bounded chunked batching.** The grid axis is split into
+  ``chunk``-sized launches (the last chunk padded by repetition), bounding
+  per-launch device footprint at chunk × T × (n_max + 2) float32s.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import types
+
+import numpy as np
+
+from repro.coding.codec import pow2_bucket
+from repro.core.delay_model import RequestClass
+from repro.core.static_optimizer import ClassPlan, build_class_plan
+from repro.fleet.workloads import PoissonWorkload, TenantMix, Workload
+
+#: Finite stand-in for +inf thresholds (float32 max, like TofecTables).
+BIG = float(np.finfo(np.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# Policies as threshold tables
+# ---------------------------------------------------------------------------
+
+
+def static_tables(n: int, k: int, k_max: int, n_max: int):
+    """(h_k, h_n, r_max) pinning the controller to the static code (n, k).
+
+    With the threshold rule ``k = 1 + #{h[1:] > q̄}``, k-1 leading ``BIG``
+    entries and trailing zeros select k for every q̄ ≥ 0; same for n. The
+    half-chunk slack in r_max keeps the float cap ``int(r_max·k)`` == n.
+    """
+    if not 1 <= k <= n <= n_max or k > k_max:
+        raise ValueError(f"invalid static code ({n},{k}) for k_max={k_max}, n_max={n_max}")
+    h_k = np.zeros(k_max + 1, np.float32)
+    h_k[:k] = BIG
+    h_n = np.zeros(n_max + 1, np.float32)
+    h_n[:n] = BIG
+    return h_k, h_n, (n + 0.5) / k
+
+
+def fixedk_tables(cls: RequestClass, L: int, k: int, *, eq7_factor: float = 2.0):
+    """(h_k, h_n, r_max) for the fixed-k, adaptive-n strategy of [3].
+
+    Reuses :class:`repro.core.controller.FixedKAdaptivePolicy`'s Q→n table,
+    re-indexed into the scan's 1-based threshold form: k-1 ``BIG`` entries
+    shift the count so ``1 + #{h_n > q̄}`` lands on n ∈ [k, n_max].
+    """
+    from repro.core.controller import FixedKAdaptivePolicy
+
+    pol = FixedKAdaptivePolicy(cls, L, k=k, eq7_factor=eq7_factor)
+    h_k = np.zeros(cls.k_max + 1, np.float32)
+    h_k[:k] = BIG
+    h_n = np.concatenate([[BIG] * k, pol.h_n[1:]]).astype(np.float32)
+    h_n = np.where(np.isinf(h_n), BIG, h_n)
+    assert h_n.shape == (cls.n_max + 1,)
+    return h_k, h_n, (cls.n_max + 0.5) / k
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    """Declarative policy for a grid point: tofec | static | fixedk."""
+
+    kind: str
+    n: int = 0
+    k: int = 0
+    alpha: float = 0.99
+    eq7_factor: float = 2.0
+
+    @classmethod
+    def tofec(cls, alpha: float = 0.99, eq7_factor: float = 2.0) -> "PolicySpec":
+        return cls("tofec", alpha=alpha, eq7_factor=eq7_factor)
+
+    @classmethod
+    def static(cls, n: int, k: int) -> "PolicySpec":
+        return cls("static", n=n, k=k)
+
+    @classmethod
+    def fixedk(cls, k: int, eq7_factor: float = 2.0) -> "PolicySpec":
+        return cls("fixedk", k=k, eq7_factor=eq7_factor)
+
+    @property
+    def name(self) -> str:
+        if self.kind == "static":
+            return f"static({self.n},{self.k})"
+        if self.kind == "fixedk":
+            return f"fixedk(k={self.k})"
+        return "tofec"
+
+
+def policy_tables(spec: PolicySpec, cls: RequestClass, L: int, plan: ClassPlan | None = None):
+    """Resolve a :class:`PolicySpec` to (h_k, h_n, r_max) numpy tables."""
+    if spec.kind == "static":
+        return static_tables(spec.n, spec.k, cls.k_max, cls.n_max)
+    if spec.kind == "fixedk":
+        return fixedk_tables(cls, L, spec.k, eq7_factor=spec.eq7_factor)
+    if spec.kind == "tofec":
+        plan = plan or build_class_plan(cls, L, eq7_factor=spec.eq7_factor)
+        h_k = np.where(np.isinf(plan.h_k), BIG, plan.h_k).astype(np.float32)
+        h_n = np.where(np.isinf(plan.h_n), BIG, plan.h_n).astype(np.float32)
+        return h_k, h_n, float(cls.r_max)
+    raise ValueError(f"unknown policy kind {spec.kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Grid construction
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCase:
+    """One grid point: arrival process × policy × seed (× class, L)."""
+
+    lam: float
+    policy: PolicySpec
+    seed: int
+    cls: RequestClass
+    L: int = 16
+    workload: Workload | None = None  # default: Poisson(lam)
+
+    def resolved_workload(self) -> Workload:
+        return self.workload if self.workload is not None else PoissonWorkload(self.lam)
+
+
+def grid_cases(
+    lams,
+    policies,
+    seeds,
+    cls: RequestClass,
+    L: int = 16,
+    workload_for=None,
+) -> list[SweepCase]:
+    """Cartesian λ × policy × seed grid; ``workload_for(lam)`` optionally
+    maps each rate to a non-Poisson workload spec."""
+    return [
+        SweepCase(
+            lam=float(lam), policy=pol, seed=int(seed), cls=cls, L=L,
+            workload=workload_for(float(lam)) if workload_for else None,
+        )
+        for lam in lams
+        for pol in policies
+        for seed in seeds
+    ]
+
+
+def tenant_cases(mix: TenantMix, policies, seeds, L: int = 16) -> list[SweepCase]:
+    """Expand a multi-tenant mix into per-class grid points (Poisson
+    splitting): each class rides the sweep with its own tables and its
+    split rate w·λ."""
+    return [
+        SweepCase(lam=sub.lam, policy=pol, seed=int(seed), cls=c, L=L, workload=sub)
+        for c, sub in mix.split()
+        for pol in policies
+        for seed in seeds
+    ]
+
+
+# ---------------------------------------------------------------------------
+# The vmapped sweep engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SweepStats:
+    """Observability for the bounded-compile claim (asserted in tests)."""
+
+    traces: int = 0  # distinct sweep compilations (incremented at trace time)
+    launches: int = 0
+    cases: int = 0
+
+    def reset(self) -> None:
+        self.traces = self.launches = self.cases = 0
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Stacked per-request outputs for every grid point.
+
+    ``out`` holds device arrays of shape (G, count): ``total``/``queueing``/
+    ``service`` delays (float32) and the chosen ``n``/``k`` (int32) — kept
+    on device so :mod:`repro.fleet.frontier` reduces them without a host
+    round-trip. ``cfg`` is the stacked per-case config (params + tables).
+    """
+
+    cases: list[SweepCase]
+    out: dict
+    cfg: dict[str, np.ndarray]
+    count: int
+    compiles: int
+    launches: int
+
+    def to_numpy(self) -> dict[str, np.ndarray]:
+        return {k: np.asarray(v) for k, v in self.out.items()}
+
+
+class FleetSweep:
+    """Chunked, shape-bucketed vmapped sweep over :class:`SweepCase` grids.
+
+    ``chunk`` bounds the grid points per launch (memory bound); ``t_floor``
+    floors the pow2 time-axis bucket so nearby horizon lengths share a
+    compilation, mirroring ``Codec.B_FLOOR``.
+    """
+
+    T_FLOOR = 512
+
+    def __init__(self, *, chunk: int = 64, t_floor: int | None = None):
+        if chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        self.chunk = chunk
+        self.t_floor = t_floor or self.T_FLOOR
+        self.stats = SweepStats()
+        self._fns: dict[tuple, object] = {}
+        self._plans: dict[tuple, ClassPlan] = {}
+
+    # -- compilation cache --------------------------------------------------
+
+    def bucket_key(self, n_cases: int, count: int, n_max: int, hk_len: int, hn_len: int):
+        """The compilation-cache key a run with these shapes lands in."""
+        return (
+            min(pow2_bucket(n_cases), self.chunk),
+            pow2_bucket(count, self.t_floor),
+            n_max,
+            hk_len,
+            hn_len,
+        )
+
+    def _build(self, key: tuple):
+        import jax
+
+        chunk, T_b, n_max, hk_len, hn_len = key
+
+        def one(cfg, inter, exps):
+            from repro.core.jax_sim import tofec_scan_core
+
+            p = types.SimpleNamespace(
+                delta_bar=cfg["delta_bar"], delta_tilde=cfg["delta_tilde"],
+                psi_bar=cfg["psi_bar"], psi_tilde=cfg["psi_tilde"],
+                J=cfg["J"], L=cfg["L"], alpha=cfg["alpha"],
+            )
+            return tofec_scan_core(
+                p, cfg["h_k"], cfg["h_n"], cfg["r_max"], inter, exps, n_max=n_max
+            )
+
+        def fn(cfg, inter, exps):
+            self.stats.traces += 1  # runs at trace time only
+            return jax.vmap(one)(cfg, inter, exps)
+
+        return jax.jit(fn)
+
+    def _fn_for(self, key: tuple):
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = self._fns[key] = self._build(key)
+        return fn
+
+    def _plan_for(self, cls: RequestClass, L: int, eq7_factor: float) -> ClassPlan:
+        key = (cls, L, eq7_factor)
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = self._plans[key] = build_class_plan(cls, L, eq7_factor=eq7_factor)
+        return plan
+
+    # -- the sweep ----------------------------------------------------------
+
+    def _stack_cfg(self, cases: list[SweepCase], hk_len: int, hn_len: int):
+        G = len(cases)
+        cfg = {
+            name: np.empty(G, np.float32)
+            for name in ("delta_bar", "delta_tilde", "psi_bar", "psi_tilde",
+                         "J", "L", "alpha", "r_max")
+        }
+        cfg["h_k"] = np.zeros((G, hk_len), np.float32)
+        cfg["h_n"] = np.zeros((G, hn_len), np.float32)
+        for i, case in enumerate(cases):
+            plan = (
+                self._plan_for(case.cls, case.L, case.policy.eq7_factor)
+                if case.policy.kind == "tofec" else None
+            )
+            h_k, h_n, r_max = policy_tables(case.policy, case.cls, case.L, plan)
+            pr = case.cls.params
+            cfg["delta_bar"][i] = pr.delta_bar
+            cfg["delta_tilde"][i] = pr.delta_tilde
+            cfg["psi_bar"][i] = pr.psi_bar
+            cfg["psi_tilde"][i] = pr.psi_tilde
+            cfg["J"][i] = case.cls.file_mb
+            cfg["L"][i] = case.L
+            cfg["alpha"][i] = case.policy.alpha
+            cfg["r_max"][i] = r_max
+            # Trailing zeros are inert thresholds (0 > q̄ never holds), so
+            # shorter per-class tables pad into the shared bucket for free.
+            cfg["h_k"][i, : len(h_k)] = h_k
+            cfg["h_n"][i, : len(h_n)] = h_n
+        return cfg
+
+    def run(self, cases: list[SweepCase], count: int) -> SweepResult:
+        """Evaluate every grid point over ``count`` arrivals.
+
+        Host side: per-case RNG streams generate the workload arrays.
+        Device side: ceil(G / chunk) vmapped launches, each hitting the
+        shape-bucket cache.
+        """
+        if not cases:
+            raise ValueError("empty case grid")
+        import jax.numpy as jnp
+
+        traces0, launches0 = self.stats.traces, self.stats.launches
+        n_max = max(c.cls.n_max for c in cases)
+        hk_len = max(c.cls.k_max for c in cases) + 1
+        hn_len = n_max + 1
+        key = self.bucket_key(len(cases), count, n_max, hk_len, hn_len)
+        chunk, T_b = key[0], key[1]
+
+        cfg = self._stack_cfg(cases, hk_len, hn_len)
+        G = len(cases)
+        inter = np.zeros((G, T_b), np.float32)
+        exps = np.zeros((G, T_b, n_max), np.float32)
+        for i, case in enumerate(cases):
+            rng = np.random.default_rng(case.seed)
+            it, ex = case.resolved_workload().device_arrays(rng, count, case.cls.n_max)
+            inter[i, :count] = it
+            # Classes with smaller n_max leave trailing Exp columns at zero;
+            # the scan masks draws at j >= k, so the padding never enters.
+            exps[i, :count, : case.cls.n_max] = ex
+
+        fn = self._fn_for(key)
+        outs = []
+        for lo in range(0, G, chunk):
+            hi = min(lo + chunk, G)
+            idx = np.arange(lo, hi)
+            if hi - lo < chunk:  # pad the tail chunk by repetition
+                idx = np.concatenate([idx, np.full(chunk - (hi - lo), lo)])
+            cfg_c = {name: jnp.asarray(v[idx]) for name, v in cfg.items()}
+            out = fn(cfg_c, jnp.asarray(inter[idx]), jnp.asarray(exps[idx]))
+            self.stats.launches += 1
+            outs.append({name: v[: hi - lo, :count] for name, v in out.items()})
+        self.stats.cases += G
+
+        stacked = {
+            name: jnp.concatenate([o[name] for o in outs], axis=0)
+            for name in outs[0]
+        }
+        return SweepResult(
+            cases=list(cases),
+            out=stacked,
+            cfg=cfg,
+            count=count,
+            compiles=self.stats.traces - traces0,
+            launches=self.stats.launches - launches0,
+        )

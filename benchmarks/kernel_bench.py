@@ -233,6 +233,81 @@ def _point_arrays(case, count: int):
     return case.resolved_workload().device_arrays(rng, count, case.cls.n_max)
 
 
+def bench_multiclass_sweep(count: int = 1024, grids: tuple = (6, 24, 96)) -> list[str]:
+    """Joint shared-pool sweep vs per-class split scans vs the event oracle.
+
+    The joint path (:class:`repro.sched.SchedSweep`) runs each grid point as
+    ONE multi-class scan over the merged stream; the split baseline runs the
+    same grids through the fleet's Poisson-splitting ``tenant_cases`` path
+    (2 fluid scans per point — cheaper per point but blind to interference);
+    at the smallest grid the discrete-event shared-pool oracle
+    (:func:`repro.core.simulator.simulate_shared_pool`) is timed for scale.
+    """
+    from repro.core import TOFECPolicy, build_class_plan
+    from repro.core.simulator import simulate_shared_pool
+    from repro.core.traces import TraceSampler
+    from repro.fleet import FleetSweep, PolicySpec, TenantMix, tenant_cases
+    from repro.sched import DisciplineSpec, SchedSweep, sched_cases
+
+    hi = RequestClass("read3mb", 3.0, PAPER_READ_3MB, k_max=6, r_max=2.0, n_max=12)
+    lo = RequestClass("read1mb", 1.0, PAPER_READ_3MB, k_max=4, r_max=2.0, n_max=8)
+    L = 16
+    disciplines = [DisciplineSpec.fifo(), DisciplineSpec.priority(0, 1),
+                   DisciplineSpec.wfq(2.0, 1.0)]
+    rows: list[str] = []
+    for grid in grids:
+        n_mix = max(grid // (len(disciplines) * 2), 1)
+        mixes = [TenantMix(float(lam), (hi, lo), (0.5, 0.5))
+                 for lam in np.linspace(10.0, 55.0, n_mix)]
+        seeds = range(-(-grid // (n_mix * len(disciplines))))
+        cases = sched_cases(mixes, disciplines, seeds, L=L)[:grid]
+
+        joint = SchedSweep(chunk=32)
+        joint.run(cases, count)  # warm the shape bucket
+        t0 = time.monotonic()
+        res = joint.run(cases, count)
+        jax.block_until_ready(res.out)
+        dt_joint = time.monotonic() - t0
+
+        split_cases = [
+            c for case in cases
+            for c in tenant_cases(case.mix, [PolicySpec.tofec()], [case.seed], L,
+                                  quiet=True)
+        ]
+        fleet = FleetSweep(chunk=64)
+        fleet.run(split_cases, count)  # warm
+        t0 = time.monotonic()
+        sres = fleet.run(split_cases, count)
+        jax.block_until_ready(sres.out)
+        dt_split = time.monotonic() - t0
+
+        derived = (f"split_fleet={1e3 * dt_split:.1f}ms"
+                   f"|joint_vs_split={dt_split / max(dt_joint, 1e-9):.2f}x"
+                   f"|launches={res.launches}|compiles={res.compiles}")
+        if grid <= 8:
+            pols = [TOFECPolicy([build_class_plan(c, L)]) for c in (hi, lo)]
+            samp = [TraceSampler(c.params, c.file_mb) for c in (hi, lo)]
+            t0 = time.monotonic()
+            for case in cases:
+                rng = np.random.default_rng(case.seed)
+                arr = np.cumsum(case.mix.interarrivals(rng, count).astype(np.float64))
+                ids = case.mix.cls_ids(rng, count)
+                kw = {}
+                if case.discipline.kind == "priority":
+                    kw["prio"] = case.discipline.prio
+                if case.discipline.kind == "wfq":
+                    kw["weights"] = case.discipline.weights
+                simulate_shared_pool(pols, arr, ids, samp, L=L,
+                                     discipline=case.discipline.kind, **kw)
+            dt_event = time.monotonic() - t0
+            derived += (f"|event_sim={1e3 * dt_event:.1f}ms"
+                        f"|vs_event={dt_event / max(dt_joint, 1e-9):.1f}x")
+        timer = BenchTimer(f"multiclass_sweep_g{grid}_t{count}", calls=1)
+        timer.elapsed = dt_joint
+        rows.append(timer.row(derived))
+    return rows
+
+
 def bench_ckpt_encode(leaf_mb: int = 1) -> list[str]:
     rng = np.random.default_rng(1)
     payload = rng.integers(0, 256, size=leaf_mb * 2**20, dtype=np.uint8)
@@ -252,5 +327,6 @@ ALL_KERNEL = [
     bench_codec_sweep,
     bench_fused_serve,
     bench_fleet_sweep,
+    bench_multiclass_sweep,
     bench_ckpt_encode,
 ]

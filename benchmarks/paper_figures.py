@@ -30,7 +30,7 @@ from benchmarks.common import (
     run_policy,
     write_csv,
 )
-from repro.core import PAPER_READ_3MB, StaticPolicy, fit_delay_params
+from repro.core import PAPER_READ_3MB, RequestClass, StaticPolicy, fit_delay_params
 from repro.core import queueing
 from repro.core.simulator import piecewise_poisson_arrivals, simulate
 from repro.core.traces import TraceSampler, TraceStore
@@ -267,6 +267,86 @@ def fig10_transient() -> list[str]:
     )]
 
 
+def fig_multiclass_disciplines(count: int = 3000) -> list[str]:
+    """§IV-style figure: per-class delay vs aggregate λ when two tenant
+    classes share ONE L-thread pool, under FIFO / strict-priority / WFQ
+    admission — the joint :mod:`repro.sched` sweep — with the fleet's
+    Poisson-split prediction (``tenant_cases``, the documented
+    approximation) as the no-interference baseline column.
+
+    The derived headline is the interference gap the fluid split cannot
+    express: at the highest λ, the low-priority class's joint p99 over its
+    split prediction (≫1) vs the high-priority class's (≈1).
+    """
+    import os
+
+    from repro.fleet import TenantMix, tenant_cases
+    from repro.sched import (
+        DisciplineSpec,
+        SchedSweep,
+        interference_summary,
+        multiclass_points,
+        sched_cases,
+        write_multiclass_artifact,
+    )
+
+    lo_cls = RequestClass("read1mb", 1.0, PAPER_READ_3MB, k_max=4, r_max=2.0, n_max=8)
+    rates = rate_grid(6, 0.25, 0.85)
+    disciplines = [
+        DisciplineSpec.fifo(),
+        DisciplineSpec.priority(0, 1),
+        DisciplineSpec.wfq(1.0, 1.0),
+    ]
+    mixes = [TenantMix(float(lam), (CLS, lo_cls), (0.5, 0.5)) for lam in rates]
+    rows = []
+    with BenchTimer("fig_multiclass_disciplines", calls=len(rates)) as t:
+        res = SchedSweep(chunk=32).run(sched_cases(mixes, disciplines, [1], L=L), count)
+        pts = multiclass_points(res)
+        # Poisson-split baseline: same mixes, split into per-class fluid
+        # queues (quiet=True — the split is the deliberate contrast here).
+        split_cases = [
+            c for mix in mixes
+            for c in tenant_cases(mix, [PolicySpec.tofec()], [1], L, quiet=True)
+        ]
+        split_res = fleet_sweep().run(split_cases, count)
+        # Split cases carry the per-class rate w·λ (w = 0.5); key the
+        # baseline by the aggregate λ it came from.
+        split = {}
+        for c, p in zip(split_cases, frontier_points(split_res)):
+            split[(round(c.lam / 0.5, 6), c.cls.name)] = p
+        for pt in pts:
+            for cl in pt.classes:
+                sp = split[(round(pt.lam, 6), cl["name"])]
+                rows.append([
+                    pt.discipline, f"{pt.lam:.2f}", cl["name"],
+                    f"{cl['mean']:.4f}", f"{cl['p50']:.4f}", f"{cl['p99']:.4f}",
+                    f"{sp.mean:.4f}", f"{sp.p99:.4f}",
+                    f"{cl['mean_k']:.2f}", f"{pt.jain_delay:.4f}",
+                ])
+        split_p99 = {
+            cl["name"]: split[(round(max(r.lam for r in pts), 6), cl["name"])].p99
+            for cl in pts[-1].classes
+        }
+        head = interference_summary(pts, split_p99)
+        write_multiclass_artifact(
+            os.path.join(RESULTS_DIR, "BENCH_multiclass.json"), res, points=pts,
+            extra={"figure": "fig_multiclass", "split_p99": split_p99},
+        )
+    write_csv(
+        "fig_multiclass_disciplines.csv",
+        ["discipline", "lambda", "class", "mean_s", "median_s", "p99_s",
+         "split_mean_s", "split_p99_s", "mean_k", "jain_delay"],
+        rows,
+    )
+    pr = head["priority(0,1)"]["p99_vs_split"]
+    return [t.row(
+        f"prio_p99_vs_split lo={pr['read1mb']:.1f}x hi={pr['read3mb']:.2f}x"
+        f"|jain fifo={head['fifo']['jain_delay']:.3f}"
+        f" prio={head['priority(0,1)']['jain_delay']:.3f}"
+        f"|compiles={res.compiles}"
+    )]
+
+
 ALL_FIGS = [
     fig1_static_tradeoff,
     fig4_task_ccdf,
@@ -276,4 +356,5 @@ ALL_FIGS = [
     fig8_composition,
     fig9_std,
     fig10_transient,
+    fig_multiclass_disciplines,
 ]

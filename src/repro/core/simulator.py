@@ -131,24 +131,93 @@ def simulate(
 
     ``sampler``: object with .sample(rng, k, n) → (n,) task delays (used for
     cls 0); ``samplers`` optionally overrides per class.
+
+    Thin front-end over :func:`simulate_shared_pool` with the FIFO
+    discipline and one shared policy instance (which observes the true
+    ``cls_id``): a single FIFO queue admitted in arrival order IS the
+    shared-pool engine with per-class queues popped earliest-arrival-first,
+    event for event and draw for draw.
+    """
+    if cls_ids is None:
+        cls_ids = np.zeros(len(arrivals), dtype=np.int64)
+    return simulate_shared_pool(
+        policy, arrivals, cls_ids, samplers or [sampler],
+        L=L, discipline="fifo", seed=seed, warmup_frac=warmup_frac,
+    )
+
+
+def simulate_shared_pool(
+    policies: list[Policy] | Policy,
+    arrivals: np.ndarray,
+    cls_ids: np.ndarray,
+    samplers: list,
+    *,
+    L: int = 16,
+    discipline: str = "fifo",
+    prio: tuple | None = None,
+    weights: tuple | None = None,
+    drr_quantum: float = 8.0,
+    seed: int = 0,
+    warmup_frac: float = 0.05,
+) -> SimResult:
+    """Multi-class shared-pool oracle: C classes contending for ONE L-thread
+    pool under a pluggable admission discipline (§IV's shared-resource view).
+
+    Unlike :func:`simulate` (single FIFO request queue), requests queue per
+    class and the discipline decides whose head-of-line request is admitted
+    when threads free up:
+
+    * ``"fifo"``     — earliest arrival across all class queues.
+    * ``"priority"`` — head of the non-empty class with the lowest ``prio``
+      rank (strict; ties broken by class index).
+    * ``"wfq"``      — deficit round-robin over class queues: each visit adds
+      ``drr_quantum``·(w_c/min w) to the class's deficit counter; a request
+      costs its task count n. Classic DRR — empty classes forfeit deficit.
+
+    ``policies`` holds ONE policy instance per class (independent adaptation
+    state); each sees a discipline-shaped queue-length observation: total
+    queued (fifo), queued at its own or higher priority (priority), or its
+    own queue scaled by the inverse of its weight share (wfq) — mirroring
+    the waiting-work terms of :func:`repro.sched.scan.multiclass_scan_core`,
+    which this function cross-validates. Passing a single :class:`Policy`
+    instead shares it across classes (it then observes the true ``cls_id``
+    per arrival) — the :func:`simulate` front-end.
     """
     rng = np.random.default_rng(seed)
     arrivals = np.asarray(arrivals, dtype=np.float64)
-    if cls_ids is None:
-        cls_ids = np.zeros(len(arrivals), dtype=np.int64)
-    samplers = samplers or [sampler]
-    policy.reset()
+    cls_ids = np.asarray(cls_ids, dtype=np.int64)
+    shared_policy = isinstance(policies, Policy)
+    if shared_policy:
+        C = int(max(int(cls_ids.max(initial=0)) + 1, len(samplers), 1))
+    else:
+        C = len(policies)
+    if discipline not in ("fifo", "priority", "wfq"):
+        raise ValueError(f"unknown discipline {discipline!r}")
+    prio = tuple(prio) if prio is not None else tuple(range(C))
+    weights = tuple(weights) if weights is not None else (1.0,) * C
+    if len(prio) != C or sorted(prio) != list(range(C)):
+        raise ValueError("prio must be a permutation of range(C)")
+    if len(weights) != C or any(wt <= 0 for wt in weights):
+        raise ValueError("weights must be C positive values")
+    for pol in ([policies] if shared_policy else policies):
+        pol.reset()
 
     seq = itertools.count()
-    events: list = []  # (time, seq, kind, payload)
+    events: list = []
     for t, c in zip(arrivals, cls_ids):
-        heapq.heappush(events, (float(t), next(seq), 0, int(c)))  # 0 = arrival
+        heapq.heappush(events, (float(t), next(seq), 0, int(c)))
 
-    request_queue: deque[_Request] = deque()
+    queues: list[deque[_Request]] = [deque() for _ in range(C)]
     task_queue: deque[_Task] = deque()
     idle = L
     now = 0.0
     done_stats: list[RequestStats] = []
+    deficit = [0.0] * C
+    drr_ptr = 0
+    # Quantum scaled so the LIGHTEST class earns drr_quantum per visit:
+    # identical service proportions, but admission needs O(n/quantum) visits
+    # instead of O(w_max/w_min) — extreme weight skews can't spin pop_next.
+    w_min = min(weights)
 
     def start_tasks():
         nonlocal idle
@@ -163,9 +232,33 @@ def simulate(
                 req.stats.t_first_start = now
             heapq.heappush(events, (now + task.delay, next(seq), 1, task))
 
+    def pop_next() -> _Request | None:
+        nonlocal drr_ptr
+        nonempty = [c for c in range(C) if queues[c]]
+        if not nonempty:
+            return None
+        if discipline == "fifo":
+            c = min(nonempty, key=lambda c: queues[c][0].stats.arrival)
+        elif discipline == "priority":
+            c = min(nonempty, key=lambda c: prio[c])
+        else:  # deficit round-robin
+            while True:
+                c = drr_ptr % C
+                drr_ptr += 1
+                if not queues[c]:
+                    deficit[c] = 0.0  # classic DRR: empty class forfeits
+                    continue
+                deficit[c] += drr_quantum * weights[c] / w_min
+                if deficit[c] >= queues[c][0].stats.n:
+                    deficit[c] -= queues[c][0].stats.n
+                    break
+        return queues[c].popleft()
+
     def admit():
-        while request_queue and idle > 0 and not task_queue:
-            req = request_queue.popleft()
+        while idle > 0 and not task_queue:
+            req = pop_next()
+            if req is None:
+                return
             st = req.stats
             s = samplers[st.cls_id] if st.cls_id < len(samplers) else samplers[0]
             delays = np.asarray(s.sample(rng, st.k, st.n), dtype=np.float64)
@@ -173,13 +266,27 @@ def simulate(
             task_queue.extend(req.tasks)
             start_tasks()
 
+    def observed_q(c: int) -> float:
+        if discipline == "fifo":
+            return float(sum(len(q) for q in queues))
+        if discipline == "priority":
+            return float(sum(len(queues[c2]) for c2 in range(C) if prio[c2] <= prio[c]))
+        act = [c2 for c2 in range(C) if queues[c2] or c2 == c]
+        return len(queues[c]) * sum(weights[c2] for c2 in act) / weights[c]
+
     while events:
         now, _, kind, payload = heapq.heappop(events)
         if kind == 0:  # arrival
             cls_id = payload
-            n, k = policy.select(q=len(request_queue), idle=idle, cls_id=cls_id, now=now)
+            # A shared policy keeps one state and sees the true class; a
+            # per-class policy owns its state and always observes class 0.
+            pol = policies if shared_policy else policies[cls_id]
+            n, k = pol.select(
+                q=observed_q(cls_id), idle=idle,
+                cls_id=cls_id if shared_policy else 0, now=now,
+            )
             st = RequestStats(arrival=now, cls_id=cls_id, n=int(n), k=int(k))
-            request_queue.append(_Request(st))
+            queues[cls_id].append(_Request(st))
             admit()
         else:  # task completion
             task: _Task = payload
@@ -192,12 +299,11 @@ def simulate(
             if req.stats.completed_tasks == req.stats.k:
                 req.stats.t_done = now
                 done_stats.append(req.stats)
-                # Preemptive cancellation of the n − k leftovers.
                 for t2 in req.tasks:
                     if not t2.done and not t2.cancelled:
                         t2.cancelled = True
                         if t2.started:
-                            idle += 1  # preempt in-service task
+                            idle += 1
             start_tasks()
             admit()
 

@@ -165,10 +165,34 @@ def grid_cases(
     ]
 
 
-def tenant_cases(mix: TenantMix, policies, seeds, L: int = 16) -> list[SweepCase]:
+def tenant_cases(
+    mix: TenantMix, policies, seeds, L: int = 16, *, quiet: bool = False
+) -> list[SweepCase]:
     """Expand a multi-tenant mix into per-class grid points (Poisson
     splitting): each class rides the sweep with its own tables and its
-    split rate w·λ."""
+    split rate w·λ.
+
+    .. note:: This is the documented **approximation path**: splitting gives
+       every class an independent fluid queue that believes it owns all L
+       threads, so cross-class interference — §IV's shared-resource story —
+       is invisible (a starved low-priority class, FIFO head-of-line
+       coupling, weighted shares). Use :class:`repro.sched.SchedSweep` with
+       a :class:`repro.sched.DisciplineSpec` for the joint shared-pool
+       simulation; pass ``quiet=True`` here when the fluid split is wanted
+       deliberately (e.g. as the no-interference baseline in benchmarks).
+    """
+    if not quiet:
+        import warnings
+
+        warnings.warn(
+            "tenant_cases() Poisson-splits the mix into independent per-class "
+            "fluid queues and cannot show cross-class interference; use "
+            "repro.sched (SchedSweep + DisciplineSpec) for the joint "
+            "shared-pool simulation, or pass quiet=True to keep the fluid "
+            "split deliberately.",
+            UserWarning,
+            stacklevel=2,
+        )
     return [
         SweepCase(lam=sub.lam, policy=pol, seed=int(seed), cls=c, L=L, workload=sub)
         for c, sub in mix.split()
@@ -194,6 +218,81 @@ class SweepStats:
         self.traces = self.launches = self.cases = 0
 
 
+class ChunkedVmapSweep:
+    """Shared engine for chunked, shape-bucketed vmapped case sweeps.
+
+    Owns what :class:`FleetSweep` and :class:`repro.sched.sweep.SchedSweep`
+    have in common: the compile cache keyed by shape bucket, the
+    trace-counting jit+vmap wrapper, the per-(class, L) plan cache, and the
+    chunked launch loop (tail chunk padded by repetition, outputs sliced
+    back and restacked). Subclasses define the bucket key, the per-case
+    config stacking and the single-case scan body.
+
+    ``chunk`` bounds the grid points per launch (memory bound); ``t_floor``
+    floors the pow2 time-axis bucket so nearby horizon lengths share a
+    compilation, mirroring ``Codec.B_FLOOR``.
+    """
+
+    T_FLOOR = 512
+
+    def __init__(self, *, chunk: int = 64, t_floor: int | None = None):
+        if chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        self.chunk = chunk
+        self.t_floor = t_floor or self.T_FLOOR
+        self.stats = SweepStats()
+        self._fns: dict[tuple, object] = {}
+        self._plans: dict[tuple, ClassPlan] = {}
+
+    def _vmapped(self, one):
+        """jit(vmap(one)) with a trace-time counter feeding ``stats``."""
+        import jax
+
+        def fn(*args):
+            self.stats.traces += 1  # runs at trace time only
+            return jax.vmap(one)(*args)
+
+        return jax.jit(fn)
+
+    def _build(self, key: tuple):
+        raise NotImplementedError
+
+    def _fn_for(self, key: tuple):
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = self._fns[key] = self._build(key)
+        return fn
+
+    def _plan_for(self, cls: RequestClass, L: int, eq7_factor: float) -> ClassPlan:
+        key = (cls, L, eq7_factor)
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = self._plans[key] = build_class_plan(cls, L, eq7_factor=eq7_factor)
+        return plan
+
+    def _launch_chunks(self, fn, cfg, streams: tuple, G: int, chunk: int, count: int):
+        """ceil(G / chunk) launches over (cfg, *streams); returns the
+        stacked (G, count) output dict. Tail-chunk rows are repetitions of
+        row ``lo`` and sliced off before stacking, so padding never leaks."""
+        import jax.numpy as jnp
+
+        outs = []
+        for lo in range(0, G, chunk):
+            hi = min(lo + chunk, G)
+            idx = np.arange(lo, hi)
+            if hi - lo < chunk:  # pad the tail chunk by repetition
+                idx = np.concatenate([idx, np.full(chunk - (hi - lo), lo)])
+            cfg_c = {name: jnp.asarray(v[idx]) for name, v in cfg.items()}
+            out = fn(cfg_c, *(jnp.asarray(s[idx]) for s in streams))
+            self.stats.launches += 1
+            outs.append({name: v[: hi - lo, :count] for name, v in out.items()})
+        self.stats.cases += G
+        return {
+            name: jnp.concatenate([o[name] for o in outs], axis=0)
+            for name in outs[0]
+        }
+
+
 @dataclasses.dataclass
 class SweepResult:
     """Stacked per-request outputs for every grid point.
@@ -215,24 +314,8 @@ class SweepResult:
         return {k: np.asarray(v) for k, v in self.out.items()}
 
 
-class FleetSweep:
-    """Chunked, shape-bucketed vmapped sweep over :class:`SweepCase` grids.
-
-    ``chunk`` bounds the grid points per launch (memory bound); ``t_floor``
-    floors the pow2 time-axis bucket so nearby horizon lengths share a
-    compilation, mirroring ``Codec.B_FLOOR``.
-    """
-
-    T_FLOOR = 512
-
-    def __init__(self, *, chunk: int = 64, t_floor: int | None = None):
-        if chunk < 1:
-            raise ValueError("chunk must be >= 1")
-        self.chunk = chunk
-        self.t_floor = t_floor or self.T_FLOOR
-        self.stats = SweepStats()
-        self._fns: dict[tuple, object] = {}
-        self._plans: dict[tuple, ClassPlan] = {}
+class FleetSweep(ChunkedVmapSweep):
+    """Chunked, shape-bucketed vmapped sweep over :class:`SweepCase` grids."""
 
     # -- compilation cache --------------------------------------------------
 
@@ -247,9 +330,7 @@ class FleetSweep:
         )
 
     def _build(self, key: tuple):
-        import jax
-
-        chunk, T_b, n_max, hk_len, hn_len = key
+        n_max = key[2]
 
         def one(cfg, inter, exps):
             from repro.core.jax_sim import tofec_scan_core
@@ -263,24 +344,7 @@ class FleetSweep:
                 p, cfg["h_k"], cfg["h_n"], cfg["r_max"], inter, exps, n_max=n_max
             )
 
-        def fn(cfg, inter, exps):
-            self.stats.traces += 1  # runs at trace time only
-            return jax.vmap(one)(cfg, inter, exps)
-
-        return jax.jit(fn)
-
-    def _fn_for(self, key: tuple):
-        fn = self._fns.get(key)
-        if fn is None:
-            fn = self._fns[key] = self._build(key)
-        return fn
-
-    def _plan_for(self, cls: RequestClass, L: int, eq7_factor: float) -> ClassPlan:
-        key = (cls, L, eq7_factor)
-        plan = self._plans.get(key)
-        if plan is None:
-            plan = self._plans[key] = build_class_plan(cls, L, eq7_factor=eq7_factor)
-        return plan
+        return self._vmapped(one)
 
     # -- the sweep ----------------------------------------------------------
 
@@ -323,8 +387,6 @@ class FleetSweep:
         """
         if not cases:
             raise ValueError("empty case grid")
-        import jax.numpy as jnp
-
         traces0, launches0 = self.stats.traces, self.stats.launches
         n_max = max(c.cls.n_max for c in cases)
         hk_len = max(c.cls.k_max for c in cases) + 1
@@ -345,22 +407,7 @@ class FleetSweep:
             exps[i, :count, : case.cls.n_max] = ex
 
         fn = self._fn_for(key)
-        outs = []
-        for lo in range(0, G, chunk):
-            hi = min(lo + chunk, G)
-            idx = np.arange(lo, hi)
-            if hi - lo < chunk:  # pad the tail chunk by repetition
-                idx = np.concatenate([idx, np.full(chunk - (hi - lo), lo)])
-            cfg_c = {name: jnp.asarray(v[idx]) for name, v in cfg.items()}
-            out = fn(cfg_c, jnp.asarray(inter[idx]), jnp.asarray(exps[idx]))
-            self.stats.launches += 1
-            outs.append({name: v[: hi - lo, :count] for name, v in out.items()})
-        self.stats.cases += G
-
-        stacked = {
-            name: jnp.concatenate([o[name] for o in outs], axis=0)
-            for name in outs[0]
-        }
+        stacked = self._launch_chunks(fn, cfg, (inter, exps), G, chunk, count)
         return SweepResult(
             cases=list(cases),
             out=stacked,

@@ -297,6 +297,27 @@ class TenantMix(Workload):
         """Per-arrival class ids for the event sim's ``cls_ids`` argument."""
         return rng.choice(len(self.classes), size=count, p=np.asarray(self.weights))
 
+    def multiclass_device_arrays(
+        self, rng: np.random.Generator, count: int, n_max: int
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(interarrivals (count,), Exp(1) draws (count, n_max), class ids
+        (count,)) — everything one joint shared-pool grid point feeds
+        :func:`repro.sched.scan.multiclass_scan_core`.
+
+        RNG plumbing matches :meth:`Workload.device_arrays` draw for draw:
+        interarrivals then exponentials from the same stream, and a
+        single-class mix consumes NO extra draws for the ids (they are all
+        zero) — the degenerate-equivalence guarantee that a one-class mix
+        through the joint scan reproduces ``tofec_scan_core`` exactly.
+        """
+        inter = self.interarrivals(rng, count)
+        exps = rng.exponential(1.0, size=(count, n_max)).astype(np.float32)
+        if len(self.classes) == 1:
+            ids = np.zeros(count, np.int32)
+        else:
+            ids = self.cls_ids(rng, count).astype(np.int32)
+        return inter, exps, ids
+
     def split(self) -> list[tuple[RequestClass, "PoissonWorkload"]]:
         """Per-class (class, Poisson(w·λ)) sub-workloads (Poisson splitting)."""
         return [

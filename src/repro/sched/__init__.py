@@ -1,0 +1,63 @@
+"""repro.sched — shared-pool multi-class scheduler simulation.
+
+§IV of the paper analyses multiple (type, size) request classes contending
+for ONE pool of L parallel connections. The fleet's ``tenant_cases`` path
+approximates that with Poisson splitting — independent per-class fluid
+queues that each think they own the pool — which erases cross-class
+interference. This package simulates the shared pool jointly:
+
+* :mod:`repro.sched.scan` — ``multiclass_scan_core``: a single ``lax.scan``
+  over the merged arrival stream carrying per-class backlog and TOFEC state,
+  with FIFO / strict-priority / weighted-fair admission disciplines as
+  traceable select logic.
+* :mod:`repro.sched.sweep` — ``SchedSweep``: (mix × discipline × seed)
+  grids vmapped through the scan with the fleet's pow2-bucketed jit caching
+  and chunked launches; heterogeneous-discipline grids compile once.
+* :mod:`repro.sched.frontier` — per-class delay percentiles, Jain fairness
+  index, interference headlines and the ``BENCH_multiclass.json`` artifact.
+
+The discrete-event oracle is :func:`repro.core.simulator.
+simulate_shared_pool`; cross-validation lives in ``tests/test_sched.py``.
+"""
+
+from repro.sched.frontier import (
+    MulticlassPoint,
+    by_discipline,
+    interference_summary,
+    jain_index,
+    multiclass_points,
+    write_multiclass_artifact,
+)
+from repro.sched.scan import (
+    DISC_FIFO,
+    DISC_NAMES,
+    DISC_PRIORITY,
+    DISC_WFQ,
+    multiclass_scan_core,
+)
+from repro.sched.sweep import (
+    DisciplineSpec,
+    SchedCase,
+    SchedResult,
+    SchedSweep,
+    sched_cases,
+)
+
+__all__ = [
+    "DISC_FIFO",
+    "DISC_PRIORITY",
+    "DISC_WFQ",
+    "DISC_NAMES",
+    "multiclass_scan_core",
+    "DisciplineSpec",
+    "SchedCase",
+    "SchedResult",
+    "SchedSweep",
+    "sched_cases",
+    "MulticlassPoint",
+    "multiclass_points",
+    "by_discipline",
+    "interference_summary",
+    "jain_index",
+    "write_multiclass_artifact",
+]

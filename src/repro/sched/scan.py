@@ -1,0 +1,171 @@
+"""Joint multi-class shared-pool scan: ONE L-thread pool, C request classes.
+
+:func:`repro.core.jax_sim.tofec_scan_core` models a single class against the
+pool; the fleet's ``tenant_cases`` path Poisson-splits a :class:`repro.fleet.
+workloads.TenantMix` into independent copies of that fluid queue, so every
+class believes it has all L threads to itself and cross-class interference —
+the phenomenon §IV's multi-class analysis is about — never appears.
+
+This module is the joint simulation: a single ``lax.scan`` over the merged
+arrival stream, carrying a **per-class backlog vector** ``w`` (seconds of
+pool work) and a per-class EWMA vector. The pool is work conserving — total
+backlog drains at rate 1 between arrivals regardless of discipline — but
+*which class's* work drains first, and how much queued work an arrival must
+wait behind, is set by the admission discipline:
+
+* ``DISC_FIFO`` — arrival order. Backlog drains across classes in proportion
+  to their share (the fluid limit of well-mixed FIFO), and an arrival waits
+  behind the *total* backlog.
+* ``DISC_PRIORITY`` — strict priority by per-class rank (lower rank drains
+  first); an arrival waits behind the backlog of its own and higher-priority
+  classes only.
+* ``DISC_WFQ`` — weighted fair (the GPS fluid limit of deficit round-robin):
+  drain splits by weight among backlogged classes with unused share
+  redistributed; an arrival of class c waits for its own backlog served at
+  class c's guaranteed share of the pool.
+
+All three are computed as plain arithmetic and chosen with ``jnp.where`` on
+a per-grid-point discipline id, so a heterogeneous discipline grid rides one
+compiled, ``vmap``-able function — the same policies-as-data trick the fleet
+plays with threshold tables. Each class keeps its own TOFEC state (backlog
+EWMA → (n, k) via its own threshold tables); usage accounting and queueing
+delay come from the shared pool.
+
+Degenerate guarantee (pinned in ``tests/test_sched.py``): with C = 1 every
+discipline reduces to ``tofec_scan_core`` draw for draw — the FIFO drain
+``w − min(dt, W)·(w/W)`` is bit-exact ``max(w − dt, 0)`` for a single class.
+
+Cross-validated against the discrete-event oracle
+:func:`repro.core.simulator.simulate_shared_pool`.
+"""
+
+from __future__ import annotations
+
+import types
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.controller import tofec_threshold_step
+from repro.core.jax_sim import _service_delay, _usage
+
+#: Discipline ids (per-grid-point runtime data, never a static arg).
+DISC_FIFO = 0
+DISC_PRIORITY = 1
+DISC_WFQ = 2
+
+DISC_NAMES = {DISC_FIFO: "fifo", DISC_PRIORITY: "priority", DISC_WFQ: "wfq"}
+
+_EPS = 1e-20  # guards 0/0 on empty backlogs; far above float32 denormals
+
+
+def multiclass_scan_core(
+    p,
+    h_k: jax.Array,
+    h_n: jax.Array,
+    disc: jax.Array,
+    prio: jax.Array,
+    wfq_w: jax.Array,
+    interarrivals: jax.Array,
+    cls_ids: jax.Array,
+    exp_draws: jax.Array,
+    *,
+    n_max: int,
+) -> dict[str, jax.Array]:
+    """Traceable joint scan body shared by the jitted entry and the sweep.
+
+    ``p`` exposes per-class vectors ``delta_bar``/``delta_tilde``/``psi_bar``/
+    ``psi_tilde``/``J``/``alpha``/``r_max`` of shape (C,) plus the scalar pool
+    size ``L``; ``h_k`` (C, k_max+1) and ``h_n`` (C, n_max+1) are the
+    per-class threshold tables (trailing zeros inert, like the fleet).
+    ``disc`` is the scalar discipline id, ``prio`` (C,) the priority ranks
+    (lower drains first; must be distinct), ``wfq_w`` (C,) positive weights.
+    ``cls_ids`` (T,) int32 names the arriving class per step. Everything but
+    ``n_max`` (the ``exp_draws`` width) may be a tracer, so the sched sweep
+    can ``vmap`` a mixed-discipline grid through one compilation.
+    """
+    C = h_k.shape[0]
+    eps = jnp.float32(_EPS)
+    # Per-class mean usage at the basic code — q-length proxy scale factors.
+    ubar = _usage(p, jnp.float32(1.0), jnp.float32(1.0))
+
+    def step(carry, inp):
+        # w: (C,) per-class waiting work [s of pool time]; t_tot/work track
+        # cumulative time and per-class service work for online utilization.
+        w, q_ewma, t_tot, work = carry
+        dt, cid, exps = inp
+        t_tot = t_tot + dt
+
+        # ---- shared-pool drain over dt (work conserving in total) --------
+        W = jnp.sum(w)
+        drain = jnp.minimum(dt, W)
+        # FIFO fluid: drained work splits across classes by backlog share.
+        # For C = 1 this is bit-exact max(w - dt, 0): w/W == 1.0 exactly.
+        share = w / jnp.maximum(W, eps)
+        w_fifo = w - drain * share
+        # Strict priority: class c only drains once all lower-rank backlog
+        # ahead of it is gone.
+        ahead = jnp.sum(jnp.where(prio[None, :] < prio[:, None], w[None, :], 0.0), axis=1)
+        w_prio = w - jnp.clip(dt - ahead, 0.0, w)
+        # Weighted fair (GPS fluid): split by weight among backlogged
+        # classes, redistributing unused share. C rounds make the interval
+        # allocation exact — each round empties a class or exhausts dt.
+        w_wfq, rem = w, drain
+        for _ in range(C):
+            active = (w_wfq > 0.0).astype(jnp.float32)
+            denom = jnp.sum(wfq_w * active)
+            alloc = rem * wfq_w * active / jnp.maximum(denom, eps)
+            d = jnp.minimum(alloc, w_wfq)
+            w_wfq = w_wfq - d
+            rem = rem - jnp.sum(d)
+        w = jnp.where(
+            disc == DISC_FIFO, w_fifo, jnp.where(disc == DISC_PRIORITY, w_prio, w_wfq)
+        )
+
+        # ---- queueing delay the class-cid arrival will experience --------
+        onehot = jnp.arange(C) == cid
+        dq_fifo = jnp.sum(w)
+        # Priority: snapshot backlog at own-or-higher rank, amplified by
+        # 1/(1 − σ_hi) for the strictly-higher-priority work that will keep
+        # overtaking during the wait (the M/G/1 priority delay-cycle factor;
+        # σ from the online utilization estimate, floor-clipped so a
+        # saturated high class starves rather than diverges).
+        rho = work / jnp.maximum(t_tot, eps)
+        rho_hi = jnp.sum(jnp.where(prio < prio[cid], rho, 0.0))
+        dq_prio = jnp.sum(jnp.where(prio <= prio[cid], w, 0.0)) / jnp.clip(
+            1.0 - rho_hi, 0.05, 1.0
+        )
+        # Own backlog served at the class's share of the pool (share over
+        # classes that are backlogged now — plus itself — not over all C).
+        phi_act = jnp.where((w > 0.0) | onehot, wfq_w, 0.0)
+        dq_wfq = w[cid] * jnp.sum(phi_act) / jnp.maximum(wfq_w[cid], eps)
+        d_q = jnp.where(
+            disc == DISC_FIFO, dq_fifo, jnp.where(disc == DISC_PRIORITY, dq_prio, dq_wfq)
+        )
+
+        # ---- per-class TOFEC adaptation (own EWMA, own tables) -----------
+        pc = types.SimpleNamespace(
+            delta_bar=p.delta_bar[cid], delta_tilde=p.delta_tilde[cid],
+            psi_bar=p.psi_bar[cid], psi_tilde=p.psi_tilde[cid], J=p.J[cid],
+        )
+        q_new, n_i, k_i = tofec_threshold_step(
+            q_ewma[cid], d_q * p.L / ubar[cid], h_k[cid], h_n[cid],
+            p.r_max[cid], p.alpha[cid],
+        )
+        q_ewma = q_ewma.at[cid].set(q_new)
+
+        nf, kf = n_i.astype(jnp.float32), k_i.astype(jnp.float32)
+        s = _usage(pc, kf, nf / kf) / p.L
+        d_s = _service_delay(pc, kf, nf, exps, n_max)
+        w = w.at[cid].add(s)
+        work = work.at[cid].add(s)
+        return (w, q_ewma, t_tot, work), (d_q + d_s, d_q, d_s, n_i, k_i)
+
+    init = (
+        jnp.zeros(C, jnp.float32), jnp.zeros(C, jnp.float32),
+        jnp.float32(0.0), jnp.zeros(C, jnp.float32),
+    )
+    _, (tot, dq, ds, ns, ks) = jax.lax.scan(
+        step, init, (interarrivals, cls_ids, exp_draws)
+    )
+    return {"total": tot, "queueing": dq, "service": ds, "n": ns, "k": ks}

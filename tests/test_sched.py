@@ -1,0 +1,355 @@
+"""repro.sched: the joint shared-pool multi-class scheduler.
+
+Pins the four claims of the subsystem:
+
+* **Degenerate equivalence** — a single-class ``TenantMix`` through
+  ``multiclass_scan_core`` reproduces ``tofec_scan_core`` draw for draw
+  (same RNG plumbing, identical (n, k) choices, delays to float32 ulp)
+  under every discipline.
+* **Oracle cross-validation** — the joint scan tracks the discrete-event
+  shared-pool simulator at ≥4 grid points mixing disciplines and class
+  sizes (the §IV-A fluid-approximation error band; priority points carry a
+  wider band — near saturation the fluid model smooths the event system's
+  head-of-line granularity).
+* **Bounded compiles** — a ≥32-point grid mixing FIFO/priority/WFQ
+  disciplines and class counts compiles ONCE per shape bucket (disciplines
+  are runtime data), observable via ``SchedSweep.stats``.
+* **Cross-class interference** — under strict priority at high aggregate λ
+  the low-priority class's p99 strictly exceeds its Poisson-split (fleet
+  ``tenant_cases``) prediction while the high-priority class stays near its
+  solo value — the phenomenon the fluid split cannot express.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    PAPER_READ_3MB,
+    PAPER_WRITE_3MB,
+    RequestClass,
+    TofecTables,
+    TOFECPolicy,
+    build_class_plan,
+)
+from repro.core.jax_sim import JaxSimParams, simulate_tofec_scan
+from repro.core.simulator import simulate_shared_pool
+from repro.core.traces import TraceSampler
+from repro.fleet import (
+    FleetSweep,
+    PoissonWorkload,
+    PolicySpec,
+    TenantMix,
+    frontier_points,
+    tenant_cases,
+)
+from repro.sched import (
+    DisciplineSpec,
+    SchedCase,
+    SchedSweep,
+    interference_summary,
+    jain_index,
+    multiclass_points,
+    sched_cases,
+    write_multiclass_artifact,
+)
+
+R3 = RequestClass("read3mb", 3.0, PAPER_READ_3MB, k_max=6, r_max=2.0, n_max=12)
+R1 = RequestClass("read1mb", 1.0, PAPER_READ_3MB, k_max=4, r_max=2.0, n_max=8)
+W1 = RequestClass("write1mb", 1.0, PAPER_WRITE_3MB, k_max=3, r_max=2.0, n_max=6)
+L = 16
+
+
+def _mix2(lam: float, w0: float = 0.6) -> TenantMix:
+    return TenantMix(lam, (R3, R1), (w0, 1.0 - w0))
+
+
+# ---------------------------------------------------------------------------
+# Degenerate equivalence: C = 1 must be tofec_scan_core, draw for draw
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "disc",
+    [DisciplineSpec.fifo(), DisciplineSpec.priority(0), DisciplineSpec.wfq(1.0)],
+)
+def test_single_class_mix_reproduces_tofec_scan(disc):
+    """Every discipline degenerates to the single-class scan on the same
+    draws: the FIFO drain is bit-exact max(w−dt, 0) for C = 1, priorities
+    and weights have nothing to arbitrate."""
+    lam, seed, count = 18.0, 5, 1200
+    mix = TenantMix(lam=lam, classes=(R3,), weights=(1.0,))
+    res = SchedSweep(chunk=4).run(
+        [SchedCase(mix=mix, discipline=disc, seed=seed, L=L)], count
+    )
+
+    # Same RNG plumbing as a fleet grid point: one default_rng(seed) stream,
+    # interarrivals then exponentials; a single-class mix draws no class ids.
+    rng = np.random.default_rng(seed)
+    inter, exps = PoissonWorkload(lam).device_arrays(rng, count, R3.n_max)
+    ref = simulate_tofec_scan(
+        JaxSimParams.from_class(R3, L),
+        TofecTables.from_plan(build_class_plan(R3, L)),
+        jnp.asarray(inter), jnp.asarray(exps),
+    )
+    out = res.to_numpy()
+    np.testing.assert_array_equal(out["n"][0], np.asarray(ref["n"]))
+    np.testing.assert_array_equal(out["k"][0], np.asarray(ref["k"]))
+    np.testing.assert_array_equal(out["service"][0], np.asarray(ref["service"]))
+    # total/queueing may differ by one float32 ulp (drain-select FMA fusion).
+    for name in ("total", "queueing"):
+        np.testing.assert_allclose(
+            out[name][0], np.asarray(ref[name]), rtol=0, atol=1e-6
+        )
+
+
+def test_single_class_mix_device_arrays_draw_for_draw():
+    """TenantMix.multiclass_device_arrays consumes the RNG stream exactly
+    like Workload.device_arrays when C = 1 (ids are free)."""
+    rng_a, rng_b = np.random.default_rng(9), np.random.default_rng(9)
+    inter_a, exps_a = PoissonWorkload(12.0).device_arrays(rng_a, 500, R3.n_max)
+    mix = TenantMix(12.0, (R3,), (1.0,))
+    inter_b, exps_b, ids = mix.multiclass_device_arrays(rng_b, 500, R3.n_max)
+    np.testing.assert_array_equal(inter_a, inter_b)
+    np.testing.assert_array_equal(exps_a, exps_b)
+    assert ids.dtype == np.int32 and not ids.any()
+
+
+# ---------------------------------------------------------------------------
+# Cross-validation against the event-sim shared-pool oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "mix,disc,tol",
+    [
+        (_mix2(20.0), DisciplineSpec.fifo(), 0.20),
+        (_mix2(28.0), DisciplineSpec.priority(0, 1), 0.30),
+        (TenantMix(30.0, (R3, R1), (0.5, 0.5)), DisciplineSpec.wfq(2.0, 1.0), 0.35),
+        (TenantMix(35.0, (R3, R1, W1), (0.4, 0.3, 0.3)), DisciplineSpec.fifo(), 0.25),
+        (TenantMix(55.0, (R3, R1), (0.5, 0.5)), DisciplineSpec.priority(1, 0), 0.40),
+    ],
+)
+def test_joint_scan_cross_validates_against_shared_pool_oracle(mix, disc, tol):
+    """≥4 joint grid points (mixed disciplines, mixed class sizes): the
+    scan's aggregate mean delay lands in the event oracle's band, and both
+    simulators agree on the per-class delay ordering."""
+    count = 3000
+    res = SchedSweep().run([SchedCase(mix=mix, discipline=disc, seed=3, L=L)], count)
+    pt = multiclass_points(res)[0]
+
+    rng = np.random.default_rng(7)
+    arr = np.cumsum(mix.interarrivals(rng, count).astype(np.float64))
+    ids = mix.cls_ids(rng, count)
+    pols = [TOFECPolicy([build_class_plan(c, L)]) for c in mix.classes]
+    samp = [TraceSampler(c.params, c.file_mb) for c in mix.classes]
+    kw = {}
+    if disc.kind == "priority":
+        kw["prio"] = disc.prio
+    if disc.kind == "wfq":
+        kw["weights"] = disc.weights
+    ev = simulate_shared_pool(
+        pols, arr, ids, samp, L=L, discipline=disc.kind, seed=8, **kw
+    )
+    ev_mean = float(ev.totals().mean())
+    assert abs(pt.agg_mean - ev_mean) / ev_mean < tol, (pt.agg_mean, ev_mean)
+
+    ev_cls = [
+        np.mean([s.total for s in ev.stats if s.cls_id == c])
+        for c in range(len(mix.classes))
+    ]
+    scan_cls = [c["mean"] for c in pt.classes]
+    # Per-class means stay in the oracle's band (loose: priority amplifies
+    # the starved class's approximation error), and when the oracle clearly
+    # separates the classes the scan agrees on who suffers most/least.
+    for e, s in zip(ev_cls, scan_cls):
+        assert abs(s - e) / e < 0.5, (scan_cls, ev_cls)
+    if max(ev_cls) > 1.5 * min(ev_cls):
+        assert int(np.argmax(scan_cls)) == int(np.argmax(ev_cls))
+        assert int(np.argmin(scan_cls)) == int(np.argmin(ev_cls))
+
+
+def test_shared_pool_oracle_validates_inputs():
+    pols = [TOFECPolicy([build_class_plan(R3, L)])]
+    arr, ids = np.arange(4.0), np.zeros(4, np.int64)
+    samp = [TraceSampler(R3.params, R3.file_mb)]
+    with pytest.raises(ValueError):
+        simulate_shared_pool(pols, arr, ids, samp, discipline="lifo")
+    with pytest.raises(ValueError):
+        simulate_shared_pool(pols, arr, ids, samp, discipline="priority", prio=(1,))
+    with pytest.raises(ValueError):
+        simulate_shared_pool(pols, arr, ids, samp, discipline="wfq", weights=(0.0,))
+
+
+# ---------------------------------------------------------------------------
+# Shape buckets / compile counts
+# ---------------------------------------------------------------------------
+
+
+def test_sched_compile_count_bounded_on_heterogeneous_discipline_grid():
+    """A ≥32-point grid mixing all three disciplines, class counts (2 and 3)
+    and rates runs in ONE compilation — disciplines and class mixes are
+    runtime data in a shared (chunk, T, C, n_max, tables) bucket."""
+    sweep = SchedSweep(chunk=16, t_floor=512)
+    disciplines = [
+        DisciplineSpec.fifo(),
+        DisciplineSpec.priority(0, 1),
+        DisciplineSpec.priority(1, 0),
+        DisciplineSpec.wfq(3.0, 1.0),
+    ]
+    mixes = [_mix2(lam) for lam in (10.0, 20.0, 30.0, 40.0)]
+    cases = sched_cases(mixes, disciplines, [0, 1], L=L)
+    # A 3-class mix in the same run pads every case to C = 3 (shared bucket).
+    cases += sched_cases(
+        [TenantMix(25.0, (R3, R1, W1), (0.4, 0.3, 0.3))],
+        [DisciplineSpec.fifo(), DisciplineSpec.priority(2, 0, 1),
+         DisciplineSpec.wfq(1.0, 1.0, 2.0)],
+        [0], L=L,
+    )
+    assert len(cases) == 35
+
+    res = sweep.run(cases, count=500)
+    assert res.compiles == 1, res.compiles
+    assert res.launches == 3  # ceil(35 / 16) memory-bounded chunks
+
+    # Same bucket: count 400 pads to the same 512 T-bucket, and keeping a
+    # 3-class case in the subset keeps the run's class padding at C = 3.
+    res2 = sweep.run(cases[:10] + cases[32:], count=400)
+    assert res2.compiles == 0
+    # New time bucket compiles once more.
+    res3 = sweep.run(cases[16:], count=600)
+    assert res3.compiles == 1
+    assert sweep.stats.traces == 2 and sweep.stats.cases == 35 + 13 + 19
+
+
+def test_sched_chunk_padding_keeps_results_exact():
+    """Tail-chunk repetition padding never leaks into joint results."""
+    cases = sched_cases(
+        [_mix2(12.0), _mix2(35.0), _mix2(55.0)],
+        [DisciplineSpec.fifo(), DisciplineSpec.priority(0, 1)],
+        [0], L=L,
+    )
+    a = SchedSweep(chunk=4).run(cases, count=600).to_numpy()  # 6 = 4 + 2(pad)
+    b = SchedSweep(chunk=8).run(cases, count=600).to_numpy()  # one launch
+    for name in ("total", "queueing", "service", "n", "k", "cls_ids"):
+        np.testing.assert_array_equal(a[name], b[name])
+
+
+# ---------------------------------------------------------------------------
+# Cross-class interference: what the Poisson split cannot see
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def interference_setup():
+    """High aggregate load, two identical-parameter classes, 50/50 split;
+    the fleet's Poisson-split prediction vs the joint shared-pool scan."""
+    lo = RequestClass("read3mb-lo", 3.0, PAPER_READ_3MB, k_max=6, r_max=2.0, n_max=12)
+    mix = TenantMix(60.0, (R3, lo), (0.5, 0.5))
+    count = 4000
+    joint = SchedSweep().run(
+        [
+            SchedCase(mix=mix, discipline=DisciplineSpec.priority(0, 1), seed=3, L=L),
+            SchedCase(mix=mix, discipline=DisciplineSpec.fifo(), seed=3, L=L),
+            SchedCase(mix=mix, discipline=DisciplineSpec.wfq(1.0, 1.0), seed=3, L=L),
+        ],
+        count,
+    )
+    split = FleetSweep().run(
+        tenant_cases(mix, [PolicySpec.tofec()], [3], L, quiet=True), count
+    )
+    split_p99 = {p.cls_name: p.p99 for p in frontier_points(split)}
+    return multiclass_points(joint), split_p99, joint
+
+
+def test_priority_starves_low_class_beyond_split_prediction(interference_setup):
+    """THE acceptance claim: under strict priority at high λ the low-priority
+    p99 strictly exceeds the fluid split's prediction (which gives every
+    class its own private pool) while the high-priority class's p99 stays
+    near its solo value."""
+    points, split_p99, _ = interference_setup
+    prio = next(p for p in points if p.discipline.startswith("priority"))
+    hi, lo = prio.cls("read3mb"), prio.cls("read3mb-lo")
+    # Low priority: the split prediction misses the interference entirely.
+    assert lo["p99"] > 2.0 * split_p99["read3mb-lo"], (lo["p99"], split_p99)
+    # High priority: unaffected by the low class — near its solo prediction.
+    assert hi["p99"] < 1.3 * split_p99["read3mb"], (hi["p99"], split_p99)
+    # And the adaptation interferes too: the starved class backs off to
+    # cheap codes while the protected class keeps chunking aggressively.
+    assert lo["mean_k"] < hi["mean_k"]
+
+
+def test_fifo_and_wfq_share_pain_fairly(interference_setup):
+    """FIFO and equal-weight WFQ spread the shared-pool congestion evenly:
+    both classes exceed their split prediction and Jain stays ≈ 1, while
+    priority collapses the fairness index."""
+    points, split_p99, _ = interference_setup
+    for name in ("fifo", "wfq(1:1)"):
+        pt = next(p for p in points if p.discipline == name)
+        assert pt.jain_delay > 0.95, (name, pt.jain_delay)
+        for c in pt.classes:
+            assert c["p99"] > split_p99[c["name"]], (name, c)
+    prio = next(p for p in points if p.discipline.startswith("priority"))
+    assert prio.jain_delay < 0.8, prio.jain_delay
+
+
+def test_interference_summary_and_artifact(interference_setup, tmp_path):
+    points, split_p99, joint = interference_setup
+    summary = interference_summary(points, split_p99)
+    assert summary["priority(0,1)"]["p99_vs_split"]["read3mb-lo"] > 2.0
+    assert summary["priority(0,1)"]["p99_spread"] > summary["fifo"]["p99_spread"]
+
+    import json
+
+    path = tmp_path / "BENCH_multiclass.json"
+    art = write_multiclass_artifact(str(path), joint, points=points)
+    on_disk = json.loads(path.read_text())
+    assert on_disk["schema"] == "repro.sched/BENCH_multiclass/v1"
+    assert on_disk["grid_size"] == 3 and len(on_disk["points"]) == 3
+    assert art["compiles"] == joint.compiles
+    for p in on_disk["points"]:
+        assert {c["name"] for c in p["classes"]} == {"read3mb", "read3mb-lo"}
+
+
+# ---------------------------------------------------------------------------
+# Frontier reductions
+# ---------------------------------------------------------------------------
+
+
+def test_multiclass_points_percentiles_and_counts():
+    mix = TenantMix(25.0, (R3, R1), (0.7, 0.3))
+    res = SchedSweep().run(
+        sched_cases([mix], [DisciplineSpec.fifo()], [0, 1], L=L), 2000
+    )
+    for pt in multiclass_points(res):
+        counts = [c["count"] for c in pt.classes]
+        assert sum(counts) == pytest.approx(2000 * 0.95, rel=0.01)
+        assert counts[0] > counts[1]  # 70/30 split
+        for c in pt.classes:
+            assert c["p50"] <= c["p90"] <= c["p95"] <= c["p99"]
+            assert 1.0 <= c["mean_k"] <= c["mean_n"]
+        assert 0.0 < pt.jain_delay <= 1.0
+
+
+def test_jain_index_bounds():
+    assert jain_index([1.0, 1.0, 1.0]) == pytest.approx(1.0)
+    assert jain_index([1.0, 0.0, 0.0]) == pytest.approx(1.0 / 3.0)
+    assert jain_index([]) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: the fluid split is now the documented approximation path
+# ---------------------------------------------------------------------------
+
+
+def test_tenant_cases_warns_and_quiet_flag():
+    mix = _mix2(20.0)
+    with pytest.warns(UserWarning, match="repro.sched"):
+        tenant_cases(mix, [PolicySpec.tofec()], [0], L)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        cases = tenant_cases(mix, [PolicySpec.tofec()], [0], L, quiet=True)
+    assert len(cases) == 2

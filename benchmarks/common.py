@@ -68,6 +68,27 @@ def fleet_sweep():
     return _FLEET_SWEEP
 
 
+_TASKQ = None
+
+
+def taskq_sweep():
+    """Process-wide (:class:`repro.taskq.TaskqSweep`, shared-key
+    :class:`repro.core.traces.DevicePools`) pair — the exact task-level
+    engine behind the figures' Greedy rows (and any other point that needs
+    per-request exactness). Pools mirror ``SAMPLER``'s shared-key setup."""
+    global _TASKQ
+    if _TASKQ is None:
+        from repro.core.traces import TraceStore
+        from repro.taskq import TaskqSweep
+
+        store = TraceStore.generate(
+            PAPER_READ_3MB, [CLS.file_mb / k for k in range(1, CLS.k_max + 1)],
+            threads=CLS.n_max, samples=8192, correlation=0.14, seed=5,
+        )
+        _TASKQ = (TaskqSweep(chunk=64), store.device_pools(n_max=CLS.n_max))
+    return _TASKQ
+
+
 def fresh_tofec(alpha: float = 0.99) -> TOFECPolicy:
     return TOFECPolicy.for_classes([CLS], L, alpha=alpha)
 

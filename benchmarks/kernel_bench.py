@@ -308,6 +308,77 @@ def bench_multiclass_sweep(count: int = 1024, grids: tuple = (6, 24, 96)) -> lis
     return rows
 
 
+def bench_taskq_engine(count: int = 1024, grids: tuple = (8, 64)) -> list[str]:
+    """Exact task-level engine: vmapped sweep vs serial scan vs event oracle.
+
+    The vmapped path runs the whole grid through :class:`repro.taskq.
+    TaskqSweep` (chunked launches, pools broadcast); the serial baseline
+    dispatches one jitted :func:`repro.taskq.engine.taskq_scan` per point on
+    the same draws; at grid 8 the discrete-event oracle
+    (:func:`repro.core.simulator.simulate`) is timed on the same shared
+    pools — the loop the exact engine replaces.
+    """
+    from repro.core.traces import TraceStore
+    from repro.core.simulator import simulate
+    from repro.fleet import PolicySpec, grid_cases
+    from repro.taskq import TaskqSweep, taskq_scan, taskq_streams
+
+    cls = RequestClass("read3mb", 3.0, PAPER_READ_3MB, k_max=6, r_max=2.0, n_max=12)
+    L = 16
+    store = TraceStore.generate(
+        PAPER_READ_3MB, [cls.file_mb / k for k in range(1, cls.k_max + 1)],
+        threads=cls.n_max, samples=4096, correlation=0.14, seed=0,
+    )
+    dp = store.device_pools(n_max=cls.n_max)
+    pools_j, sizes_j = jnp.asarray(dp.pools), jnp.asarray(dp.sizes_mb)
+    sweep = TaskqSweep(chunk=64)
+    rows: list[str] = []
+    for grid in grids:
+        lams = np.linspace(5.0, 60.0, max(grid // 8, 1))
+        seeds = range(-(-grid // len(lams)))
+        cases = grid_cases(lams, [PolicySpec.tofec()], seeds, cls, L)[:grid]
+
+        sweep.run(cases, count, dp)  # warm the shape bucket
+        t0 = time.monotonic()
+        res = sweep.run(cases, count, dp)
+        jax.block_until_ready(res.out)
+        dt_vmap = time.monotonic() - t0
+
+        # Serial baseline: one jitted single-point scan per grid point.
+        def one(case):
+            inter, idx = taskq_streams(case, count, dp.n_rows)
+            cfg = {name: jnp.asarray(res.cfg[name][cases.index(case)])
+                   for name in res.cfg}
+            return taskq_scan(cfg, jnp.asarray(inter), jnp.asarray(idx),
+                              pools_j, sizes_j, L=L, q_cap=sweep.q_cap)
+
+        one(cases[0])["total"].block_until_ready()  # warm
+        t0 = time.monotonic()
+        for case in cases:
+            one(case)["total"].block_until_ready()
+        dt_serial = time.monotonic() - t0
+
+        derived = (f"serial_scan={1e3 * dt_serial:.1f}ms"
+                   f"|speedup={dt_serial / max(dt_vmap, 1e-9):.2f}x"
+                   f"|launches={res.launches}|compiles={res.compiles}")
+        if grid <= 8:
+            from repro.core import TOFECPolicy, build_class_plan
+
+            t0 = time.monotonic()
+            for case in cases:
+                inter, idx = taskq_streams(case, count, dp.n_rows)
+                arr = np.cumsum(inter.astype(np.float64))
+                simulate(TOFECPolicy([build_class_plan(cls, L)]), arr,
+                         dp.host_sampler(cls.file_mb, idx), L=L)
+            dt_event = time.monotonic() - t0
+            derived += (f"|event_sim={1e3 * dt_event:.1f}ms"
+                        f"|vs_event={dt_event / max(dt_vmap, 1e-9):.1f}x")
+        timer = BenchTimer(f"taskq_engine_g{grid}_t{count}", calls=1)
+        timer.elapsed = dt_vmap
+        rows.append(timer.row(derived))
+    return rows
+
+
 def bench_ckpt_encode(leaf_mb: int = 1) -> list[str]:
     rng = np.random.default_rng(1)
     payload = rng.integers(0, 256, size=leaf_mb * 2**20, dtype=np.uint8)
@@ -328,5 +399,6 @@ ALL_KERNEL = [
     bench_fused_serve,
     bench_fleet_sweep,
     bench_multiclass_sweep,
+    bench_taskq_engine,
     bench_ckpt_encode,
 ]

@@ -7,8 +7,10 @@ The λ-sweeps behind Fig.1/7/8 run on the vmapped fleet simulator
 (:mod:`repro.fleet`): one grid = a handful of jitted launches instead of a
 serial host loop, with discrete-event spot-checks retained at a few grid
 points (the event sim stays the oracle; the fleet scan is the paper's own
-§IV-A approximation, cross-validated in ``tests/test_fleet.py``). Policies
-the threshold tables can't express (Greedy, MPC) stay on the event sim.
+§IV-A approximation, cross-validated in ``tests/test_fleet.py``). Greedy —
+not table-expressible — rides the exact task-level engine
+(:mod:`repro.taskq`) in Fig.7/9; MPC, whose cost-model state stays
+host-side, remains on the event sim.
 """
 
 from __future__ import annotations
@@ -28,6 +30,7 @@ from benchmarks.common import (
     fresh_tofec,
     rate_grid,
     run_policy,
+    taskq_sweep,
     write_csv,
 )
 from repro.core import PAPER_READ_3MB, RequestClass, StaticPolicy, fit_delay_params
@@ -129,8 +132,10 @@ def fig6_linear_fit() -> list[str]:
 def fig7_adaptive_tradeoff(count: int = 3500) -> list[str]:
     """Fig.7: mean/median/p90/p99 vs λ — TOFEC, FixedK(6), basic, replication
     and every static code in ONE fleet launch (best_static is the per-rate
-    min over the static part of the grid); Greedy and MPC, which the
-    threshold tables can't express, stay on the event sim. Emits the
+    min over the static part of the grid); Greedy rides the exact task
+    engine (one vmapped taskq launch over the λ grid — it observes idle
+    threads, which only the task-level simulation has); MPC, whose
+    cost-model state stays host-side, remains on the event sim. Emits the
     BENCH_fleet.json frontier artifact."""
     import os
 
@@ -155,6 +160,10 @@ def fig7_adaptive_tradeoff(count: int = 3500) -> list[str]:
             extra={"figure": "fig7", "rates": [float(x) for x in rates]},
         )
         by = frontier(pts)
+        tq, pools = taskq_sweep()
+        greedy_by = frontier(frontier_points(tq.run(
+            grid_cases(rates, [PolicySpec.greedy()], [1], CLS, L), count, pools
+        )))["greedy"]
         for i, lam in enumerate(rates):
             for name, fleet_name in fleet_names.items():
                 p = by[fleet_name][i]
@@ -166,11 +175,14 @@ def fig7_adaptive_tradeoff(count: int = 3500) -> list[str]:
                          f"{min(p.p50 for p in stat_pts):.4f}",
                          f"{min(p.p90 for p in stat_pts):.4f}",
                          f"{min(p.p99 for p in stat_pts):.4f}", ""])
-            # Greedy / MPC: event-sim only (state not expressible as tables).
-            for name, pol in [("greedy", fresh_greedy()), ("mpc", MPCPolicy(CLS, L))]:
-                s = run_policy(pol, lam, count).summary()
-                rows.append([name, f"{lam:.2f}", f"{s['mean']:.4f}", f"{s['median']:.4f}",
-                             f"{s['p90']:.4f}", f"{s['p99']:.4f}", f"{s['mean_k']:.2f}"])
+            # Greedy: exact task engine (vmapped over the whole λ grid).
+            g = greedy_by[i]
+            rows.append(["greedy", f"{lam:.2f}", f"{g.mean:.4f}", f"{g.p50:.4f}",
+                         f"{g.p90:.4f}", f"{g.p99:.4f}", f"{g.mean_k:.2f}"])
+            # MPC: event-sim only (host-side cost-model state).
+            s = run_policy(MPCPolicy(CLS, L), lam, count).summary()
+            rows.append(["mpc", f"{lam:.2f}", f"{s['mean']:.4f}", f"{s['median']:.4f}",
+                         f"{s['p90']:.4f}", f"{s['p99']:.4f}", f"{s['mean_k']:.2f}"])
     write_csv(
         "fig7_adaptive_tradeoff.csv",
         ["policy", "lambda", "mean_s", "median_s", "p90_s", "p99_s", "mean_k"], rows,
@@ -217,18 +229,30 @@ def fig8_composition(count: int = 3500) -> list[str]:
 
 
 def fig9_std(count: int = 3500) -> list[str]:
-    """Fig.9: delay standard deviation — TOFEC vs Greedy (QoS claim)."""
+    """Fig.9: delay standard deviation — TOFEC vs Greedy (QoS claim), both
+    policies in ONE exact task-engine launch (Greedy's idle-thread state and
+    the per-request order-statistic spread are task-level quantities the
+    fluid scan cannot produce); an event-sim spot-check of the Greedy std is
+    retained at the lightest rate."""
     rates = rate_grid(6, 0.15, 0.9)
     rows = []
     ratios = []
     with BenchTimer("fig9_std", calls=len(rates)) as t:
-        for lam in rates:
-            s_t = run_policy(fresh_tofec(), lam, count).totals().std()
-            s_g = run_policy(fresh_greedy(), lam, count).totals().std()
+        tq, pools = taskq_sweep()
+        res = tq.run(
+            grid_cases(rates, [PolicySpec.tofec(), PolicySpec.greedy()], [1], CLS, L),
+            count, pools,
+        )
+        by = frontier(frontier_points(res))
+        for i, lam in enumerate(rates):
+            s_t, s_g = by["tofec"][i].std, by["greedy"][i].std
             rows.append([f"{lam:.2f}", f"{s_t:.4f}", f"{s_g:.4f}"])
             ratios.append(s_g / s_t)
+        ev = run_policy(fresh_greedy(), rates[0], count).totals().std()
+        spot = abs(by["greedy"][0].std - ev) / ev
     write_csv("fig9_std.csv", ["lambda", "tofec_std_s", "greedy_std_s"], rows)
-    return [t.row(f"greedy/tofec_std_mid={np.median(ratios):.2f}x(paper:2-3x)")]
+    return [t.row(f"greedy/tofec_std_mid={np.median(ratios):.2f}x(paper:2-3x)"
+                  f"|event_spotcheck_relerr={spot:.3f}")]
 
 
 def fig10_transient() -> list[str]:

@@ -38,6 +38,7 @@ class RequestStats:
     t_first_start: float = np.nan
     t_done: float = np.nan
     completed_tasks: int = 0
+    arrival_index: int = -1  # global arrival order (shared-pool sampler hook)
 
     @property
     def d_q(self) -> float:
@@ -261,7 +262,16 @@ def simulate_shared_pool(
                 return
             st = req.stats
             s = samplers[st.cls_id] if st.cls_id < len(samplers) else samplers[0]
-            delays = np.asarray(s.sample(rng, st.k, st.n), dtype=np.float64)
+            # Shared-pool hook: samplers exporting ``sample_indexed`` (e.g.
+            # repro.core.traces.PoolSampler) are addressed by the request's
+            # arrival index instead of RNG call order, so the oracle reads
+            # the same pre-sampled pool rows as the device task engine.
+            if hasattr(s, "sample_indexed"):
+                delays = np.asarray(
+                    s.sample_indexed(st.arrival_index, st.k, st.n), dtype=np.float64
+                )
+            else:
+                delays = np.asarray(s.sample(rng, st.k, st.n), dtype=np.float64)
             req.tasks = [_Task(req, float(d)) for d in delays]
             task_queue.extend(req.tasks)
             start_tasks()
@@ -275,7 +285,7 @@ def simulate_shared_pool(
         return len(queues[c]) * sum(weights[c2] for c2 in act) / weights[c]
 
     while events:
-        now, _, kind, payload = heapq.heappop(events)
+        now, seq_i, kind, payload = heapq.heappop(events)
         if kind == 0:  # arrival
             cls_id = payload
             # A shared policy keeps one state and sees the true class; a
@@ -285,7 +295,11 @@ def simulate_shared_pool(
                 q=observed_q(cls_id), idle=idle,
                 cls_id=cls_id if shared_policy else 0, now=now,
             )
-            st = RequestStats(arrival=now, cls_id=cls_id, n=int(n), k=int(k))
+            # Arrivals are heap-pushed first with seq 0..T-1 in arrival
+            # order, so seq_i IS the global arrival index.
+            st = RequestStats(
+                arrival=now, cls_id=cls_id, n=int(n), k=int(k), arrival_index=seq_i
+            )
             queues[cls_id].append(_Request(st))
             admit()
         else:  # task completion

@@ -122,6 +122,92 @@ class TraceStore:
         off = c[~np.eye(n, dtype=bool)]
         return float(off.mean())
 
+    def device_pools(self, n_max: int, size: int | None = None) -> "DevicePools":
+        """Export the per-chunk-size pools as one stacked device-ready block.
+
+        Returns a :class:`DevicePools` holding ``sizes_mb`` (S,) float32 and
+        ``pools`` (S, size, n_max) float32 — the shared pre-sampled delay
+        supply consumed by BOTH the on-device task engine
+        (:mod:`repro.taskq`) and the host event oracle (via
+        :meth:`DevicePools.host_sampler`). Rows are whole jointly-sampled
+        thread batches, so the shared-key copula correlation of the trace
+        survives the export; reading row ``i`` of pool ``s`` yields identical
+        values on both sides, which is what makes the engine-vs-oracle
+        parity pin of ``tests/test_taskq.py`` possible.
+        """
+        widths = [p.shape[1] for p in self.pools]
+        if min(widths) < n_max:
+            raise ValueError(
+                f"store pools have {min(widths)} threads; need >= n_max={n_max}"
+            )
+        rows = min(p.shape[0] for p in self.pools)
+        size = rows if size is None else size
+        if size > rows:
+            raise ValueError(f"requested {size} rows; pools hold only {rows}")
+        stacked = np.stack([p[:size, :n_max] for p in self.pools])
+        return DevicePools(
+            sizes_mb=self.chunk_sizes_mb.astype(np.float32),
+            pools=stacked.astype(np.float32),
+        )
+
+
+@dataclasses.dataclass
+class DevicePools:
+    """Stacked per-chunk-size delay pools shared by device and host samplers.
+
+    ``pools[s, i, j]`` is the delay of thread j in jointly-sampled batch i at
+    chunk size ``sizes_mb[s]``. The pool index for a request served at code
+    dimension k is ``argmin |sizes_mb − J/k|`` computed in float32 — the
+    device engine and :class:`PoolSampler` use the byte-identical rule so
+    they always land in the same pool.
+    """
+
+    sizes_mb: np.ndarray  # (S,) float32
+    pools: np.ndarray     # (S, P, W) float32
+
+    @property
+    def n_rows(self) -> int:
+        return self.pools.shape[1]
+
+    def pool_index(self, file_mb: float, k: int) -> int:
+        B = np.float32(file_mb) / np.float32(k)
+        return int(np.argmin(np.abs(self.sizes_mb - B)))
+
+    def host_sampler(self, file_mb: float, indices: np.ndarray) -> "PoolSampler":
+        """Oracle-side sampler reading the same rows the device engine reads
+        (``indices[i]`` is request i's pre-sampled row draw)."""
+        return PoolSampler(self, file_mb, np.asarray(indices, dtype=np.int64))
+
+
+@dataclasses.dataclass
+class PoolSampler:
+    """Trace sampler replaying :class:`DevicePools` rows by request index.
+
+    Exposes the :func:`repro.core.simulator.simulate` sampler interface plus
+    the ``sample_indexed`` oracle hook: when present, the event simulator
+    passes each request's arrival index so host draws line up with the
+    device engine's ``pools[s, indices[i]]`` gather draw for draw, even when
+    admission order and arrival order are allowed to diverge (multi-class
+    disciplines). ``sample`` falls back to call-order indexing, which equals
+    arrival order for the single-class FIFO oracle.
+    """
+
+    device: DevicePools
+    file_mb: float
+    indices: np.ndarray
+    _ptr: int = 0
+
+    def sample_indexed(self, index: int, k: int, n: int) -> np.ndarray:
+        if n > self.device.pools.shape[2]:
+            raise ValueError(f"n={n} exceeds pool width {self.device.pools.shape[2]}")
+        s = self.device.pool_index(self.file_mb, k)
+        return self.device.pools[s, self.indices[index], :n].astype(np.float64)
+
+    def sample(self, rng: np.random.Generator, k: int, n: int) -> np.ndarray:
+        i = self._ptr
+        self._ptr += 1
+        return self.sample_indexed(i, k, n)
+
 
 @dataclasses.dataclass
 class StoreSampler:

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import queueing
+from repro.fleet.stats import masked_percentiles
 
 
 @dataclasses.dataclass
@@ -67,11 +68,11 @@ def _reduce_block(out, delta_bar, delta_tilde, psi_bar, psi_tilde, J, *, w: int)
         psi_bar=psi_bar[:, None], psi_tilde=psi_tilde[:, None],
     )
     usage = queueing.usage(params, J[:, None], kf, r)  # Eq.3, broadcast
-    pct = jnp.percentile(tot, jnp.asarray([50.0, 90.0, 95.0, 99.0]), axis=1)
+    pct = masked_percentiles(tot, [50.0, 90.0, 95.0, 99.0])
     return {
         "mean": jnp.mean(tot, axis=1),
         "std": jnp.std(tot, axis=1),
-        "p50": pct[0], "p90": pct[1], "p95": pct[2], "p99": pct[3],
+        "p50": pct[:, 0], "p90": pct[:, 1], "p95": pct[:, 2], "p99": pct[:, 3],
         "mean_queueing": jnp.mean(out["queueing"][:, w:], axis=1),
         "mean_k": jnp.mean(kf, axis=1),
         "mean_n": jnp.mean(nf, axis=1),

@@ -1,0 +1,49 @@
+"""Shared on-device reduction helpers for the sweep frontiers.
+
+:func:`masked_percentiles` is the single implementation of the
+sort-and-gather percentile reduction that used to live twice — inline in
+``repro.fleet.frontier`` (unmasked ``jnp.percentile``) and in
+``repro.sched.frontier`` (class-masked sort + gather). All three frontier
+modules (fleet, sched, taskq) now route through this one:
+
+* values outside ``mask`` are pushed to ``BIG`` before the sort, so they
+  sort past every real sample and never enter a gather;
+* the gather index is ``floor(q/100 · (count−1))`` — lower-interpolation
+  percentiles, exact order statistics of the masked sample (no
+  interpolation between neighbors, so the result is always a value that
+  actually occurred);
+* rows whose mask is empty report 0.0, matching their masked means.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+#: Finite stand-in for +inf in float32 sorts (sorts past any real delay).
+BIG = float(np.finfo(np.float32).max)
+
+
+def masked_percentiles(x, qs, mask=None):
+    """(G, T) values → (G, len(qs)) lower-interpolation percentiles.
+
+    ``mask`` (G, T) bool restricts each row to a subsample (e.g. one class
+    of a multi-class stream); ``None`` reduces over whole rows. Traceable —
+    safe inside jitted reductions.
+    """
+    qs = jnp.asarray(qs, jnp.float32)
+    T = x.shape[1]
+    if mask is None:
+        cnt = jnp.full((x.shape[0],), T, jnp.int32)
+        srt = jnp.sort(x, axis=1)
+    else:
+        cnt = jnp.sum(mask, axis=1).astype(jnp.int32)
+        srt = jnp.sort(jnp.where(mask, x, BIG), axis=1)
+    idx = jnp.clip(
+        (qs[:, None] / 100.0 * (cnt[None, :] - 1)).astype(jnp.int32), 0, T - 1
+    )  # (len(qs), G)
+    # An empty subsample would gather the BIG sentinel; report 0.0 instead
+    # (matching the corresponding masked mean).
+    return jnp.where(
+        cnt[:, None] > 0, jnp.take_along_axis(srt, idx.T, axis=1), 0.0
+    )  # (G, len(qs))

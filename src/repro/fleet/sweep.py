@@ -81,7 +81,13 @@ def fixedk_tables(cls: RequestClass, L: int, k: int, *, eq7_factor: float = 2.0)
 
 @dataclasses.dataclass(frozen=True)
 class PolicySpec:
-    """Declarative policy for a grid point: tofec | static | fixedk."""
+    """Declarative policy for a grid point: tofec | static | fixedk | greedy.
+
+    ``greedy`` (§V-A idle-thread heuristic) is NOT table-expressible — it
+    observes the instantaneous idle-thread count, which the fluid scan does
+    not model. Greedy grid points only run on the exact task-level engine
+    (:class:`repro.taskq.TaskqSweep`); :func:`policy_tables` raises for them.
+    """
 
     kind: str
     n: int = 0
@@ -101,12 +107,18 @@ class PolicySpec:
     def fixedk(cls, k: int, eq7_factor: float = 2.0) -> "PolicySpec":
         return cls("fixedk", k=k, eq7_factor=eq7_factor)
 
+    @classmethod
+    def greedy(cls) -> "PolicySpec":
+        return cls("greedy")
+
     @property
     def name(self) -> str:
         if self.kind == "static":
             return f"static({self.n},{self.k})"
         if self.kind == "fixedk":
             return f"fixedk(k={self.k})"
+        if self.kind == "greedy":
+            return "greedy"
         return "tofec"
 
 
@@ -121,6 +133,11 @@ def policy_tables(spec: PolicySpec, cls: RequestClass, L: int, plan: ClassPlan |
         h_k = np.where(np.isinf(plan.h_k), BIG, plan.h_k).astype(np.float32)
         h_n = np.where(np.isinf(plan.h_n), BIG, plan.h_n).astype(np.float32)
         return h_k, h_n, float(cls.r_max)
+    if spec.kind == "greedy":
+        raise ValueError(
+            "greedy is not table-expressible (it observes idle threads, not "
+            "backlog); run it on the exact task engine: repro.taskq.TaskqSweep"
+        )
     raise ValueError(f"unknown policy kind {spec.kind!r}")
 
 
@@ -244,13 +261,16 @@ class ChunkedVmapSweep:
         self._fns: dict[tuple, object] = {}
         self._plans: dict[tuple, ClassPlan] = {}
 
-    def _vmapped(self, one):
-        """jit(vmap(one)) with a trace-time counter feeding ``stats``."""
+    def _vmapped(self, one, in_axes=0):
+        """jit(vmap(one, in_axes)) with a trace-time counter feeding
+        ``stats``. ``in_axes`` entries of ``None`` mark grid-shared broadcast
+        arguments (e.g. the taskq engine's trace pools) that every grid row
+        reads without a per-row copy."""
         import jax
 
         def fn(*args):
             self.stats.traces += 1  # runs at trace time only
-            return jax.vmap(one)(*args)
+            return jax.vmap(one, in_axes=in_axes)(*args)
 
         return jax.jit(fn)
 
@@ -270,20 +290,25 @@ class ChunkedVmapSweep:
             plan = self._plans[key] = build_class_plan(cls, L, eq7_factor=eq7_factor)
         return plan
 
-    def _launch_chunks(self, fn, cfg, streams: tuple, G: int, chunk: int, count: int):
-        """ceil(G / chunk) launches over (cfg, *streams); returns the
-        stacked (G, count) output dict. Tail-chunk rows are repetitions of
-        row ``lo`` and sliced off before stacking, so padding never leaks."""
+    def _launch_chunks(self, fn, cfg, streams: tuple, G: int, chunk: int, count: int,
+                       broadcast: tuple = ()):
+        """ceil(G / chunk) launches over (cfg, *streams, *broadcast); returns
+        the stacked (G, count) output dict. Tail-chunk rows are repetitions
+        of row ``lo`` and sliced off before stacking, so padding never leaks.
+        ``broadcast`` arguments are passed whole to every launch (no grid
+        axis) — they must line up with ``None`` entries of the builder's
+        ``in_axes``."""
         import jax.numpy as jnp
 
         outs = []
+        bcast = tuple(jnp.asarray(b) for b in broadcast)
         for lo in range(0, G, chunk):
             hi = min(lo + chunk, G)
             idx = np.arange(lo, hi)
             if hi - lo < chunk:  # pad the tail chunk by repetition
                 idx = np.concatenate([idx, np.full(chunk - (hi - lo), lo)])
             cfg_c = {name: jnp.asarray(v[idx]) for name, v in cfg.items()}
-            out = fn(cfg_c, *(jnp.asarray(s[idx]) for s in streams))
+            out = fn(cfg_c, *(jnp.asarray(s[idx]) for s in streams), *bcast)
             self.stats.launches += 1
             outs.append({name: v[: hi - lo, :count] for name, v in out.items()})
         self.stats.cases += G

@@ -5,10 +5,10 @@ multi-class quantities the fluid split cannot: per-class delay percentiles
 under cross-class interference, per-class chosen-code mixes, the Jain
 fairness index of per-class mean delay, and the ``BENCH_multiclass.json``
 artifact. Class membership is a runtime mask (``cls_ids``), so one jitted
-reduction covers the whole (G, T) block: per-class percentiles are computed
-by sorting class-masked copies (non-members pushed to +inf) and gathering at
-the class's own count — lower-interpolation percentiles, exact for the class
-sample.
+reduction covers the whole (G, T) block: per-class percentiles route through
+the shared :func:`repro.fleet.stats.masked_percentiles` helper (class-masked
+sort + gather at the class's own count — lower-interpolation percentiles,
+exact for the class sample).
 """
 
 from __future__ import annotations
@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-_BIG = float(np.finfo(np.float32).max)
+from repro.fleet.stats import masked_percentiles
 
 
 def jain_index(xs) -> float:
@@ -42,22 +42,13 @@ def _reduce_multiclass(out, *, C: int, w: int):
     nf = out["n"][:, w:].astype(jnp.float32)
     kf = out["k"][:, w:].astype(jnp.float32)
     ids = out["cls_ids"][:, w:]
-    T = tot.shape[1]
     qs = jnp.asarray([50.0, 90.0, 95.0, 99.0])
 
     def one_class(c):
         mask = ids == c
         cnt = jnp.sum(mask, axis=1)
         safe = jnp.maximum(cnt, 1).astype(jnp.float32)
-        srt = jnp.sort(jnp.where(mask, tot, _BIG), axis=1)
-        idx = jnp.clip(
-            (qs[:, None] / 100.0 * (cnt[None, :] - 1)).astype(jnp.int32), 0, T - 1
-        )  # (4, G)
-        # A class with zero post-warmup arrivals would gather the _BIG mask
-        # sentinel; report 0.0 (matching its masked mean) instead.
-        pct = jnp.where(
-            cnt[:, None] > 0, jnp.take_along_axis(srt, idx.T, axis=1), 0.0
-        )  # (G, 4)
+        pct = masked_percentiles(tot, qs, mask)  # (G, 4)
         return {
             "count": cnt,
             "mean": jnp.sum(jnp.where(mask, tot, 0.0), axis=1) / safe,

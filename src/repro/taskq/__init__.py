@@ -1,0 +1,55 @@
+"""repro.taskq — on-device trace-driven task-level queue engine.
+
+The fleet (:mod:`repro.fleet`) and scheduler (:mod:`repro.sched`) sweeps
+run the paper's *fluid* §IV-A approximation — fast, but per-request delay
+is modeled, not simulated. This package runs the **exact** §II-A task-level
+system on device: per-request delay is the k-th order statistic of n
+correlated chunk-task delays racing over a shared L-thread pool with
+preemptive cancellation of stragglers, exactly as the discrete-event oracle
+computes it — and matching that oracle draw for draw when both consume the
+same pre-sampled trace pools.
+
+* :mod:`repro.taskq.engine` — ``taskq_scan_core``: the exact per-request
+  recurrence (FIFO assignment with own-completion feedback, k-of-n
+  completion, cancellation replay) as one ``lax.scan`` over arrivals.
+* :mod:`repro.taskq.policies` — policies as runtime data: threshold tables
+  (TOFEC / static / fixed-k, shared with the fleet) plus the traceable
+  §V-A ``greedy_select``, which needs the idle-thread count only the exact
+  engine observes.
+* :mod:`repro.taskq.sweep` — ``TaskqSweep``: (λ × policy × seed) grids
+  vmapped with the fleet's bucketed jit cache and chunked launches, trace
+  pools broadcast grid-wide; ``BENCH_taskq.json`` artifact writer.
+
+Use ``taskq`` when per-request exactness matters (tail percentiles under
+cancellation, Greedy/idle-aware policies, trace replay); use ``fleet``/
+``sched`` for cheap fluid scans over very large grids.
+"""
+
+from repro.taskq.engine import taskq_scan, taskq_scan_core
+from repro.taskq.policies import (
+    POL_GREEDY,
+    POL_TABLE,
+    EncodedPolicy,
+    encode_policy,
+    greedy_select,
+)
+from repro.taskq.sweep import (
+    TaskqResult,
+    TaskqSweep,
+    taskq_streams,
+    write_taskq_artifact,
+)
+
+__all__ = [
+    "taskq_scan",
+    "taskq_scan_core",
+    "POL_TABLE",
+    "POL_GREEDY",
+    "EncodedPolicy",
+    "encode_policy",
+    "greedy_select",
+    "TaskqSweep",
+    "TaskqResult",
+    "taskq_streams",
+    "write_taskq_artifact",
+]

@@ -1,0 +1,190 @@
+"""Exact task-level FEC queue engine as one ``lax.scan`` over arrivals.
+
+:mod:`repro.core.jax_sim` runs the paper's §IV-A *fluid* approximation — a
+single Lindley recursion with service rate L/U(n, k). This module runs the
+**exact** §II-A system instead, on device: L threads, FIFO request backlog,
+k-of-n completion, preemptive cancellation of the n−k stragglers, task
+delays read from pre-sampled trace pools. It matches the discrete-event
+oracle (:func:`repro.core.simulator.simulate`) draw for draw when both
+consume the same :class:`repro.core.traces.DevicePools` — the parity pin of
+``tests/test_taskq.py``.
+
+Why one admission per scan step is exact
+----------------------------------------
+With a single FIFO class, requests are admitted in arrival order, and a
+request's service depends only on (a) the thread busy-until multiset left
+by its predecessors and (b) its own task delays — never on later arrivals.
+So the whole event simulation collapses to a per-request recurrence over an
+L-vector ``b`` of thread busy-until times:
+
+1. **Assign** (pass 1): tasks take threads in FIFO order at successive
+   thread-free events. ``fori_loop`` over the task lanes: task m starts at
+   ``S_m = max(t, min(f))`` and tentatively completes at ``C_m = S_m + X_m``
+   (updating ``f``) — this handles the intra-request feedback where a
+   request's later tasks start on threads freed by its *own* earlier
+   completions.
+2. **Complete**: the request departs at the k-th order statistic
+   ``D = sort(C)[k−1]``. Tasks with ``C ≤ D`` are the k winners (task
+   delays are strictly positive, so every winner's start precedes D);
+   tasks with ``S ≥ D`` never start (cancelled in queue); the rest are
+   cancelled *in service* at D.
+3. **Cancel** (pass 2): replay the assignment against the real outcome —
+   started tasks hold their thread until ``min(C, D)``, never-started tasks
+   leave it untouched. Never-started tasks form a suffix of the FIFO task
+   order and only ever claim threads freeing at or after D, so the pass-1
+   and pass-2 thread-free multisets agree below D and the replay is exact.
+
+Queue-length observable: the carry holds a rolling ring of the last
+``q_cap`` admission times (the FIFO backlog); the backlog length at an
+arrival is the count of prior admissions still in the future — exact while
+the instantaneous backlog is shorter than ``q_cap`` (at which point the
+observation saturates; threshold policies have long since pinned the basic
+code). The idle-thread count ``#{b ≤ t}`` is exact always: a thread with
+no residual work is idle precisely because admission is work-conserving.
+
+Everything but the shapes may be a tracer, so :class:`repro.taskq.sweep.
+TaskqSweep` vmaps heterogeneous (λ × policy × seed) grids — threshold AND
+greedy points mixed — through one compilation per shape bucket.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.controller import tofec_threshold_step
+from repro.taskq.policies import POL_GREEDY, greedy_select
+
+_INF = jnp.float32(jnp.inf)
+
+
+def taskq_scan_core(
+    cfg,
+    interarrivals: jax.Array,
+    pool_idx: jax.Array,
+    pools: jax.Array,
+    pool_sizes: jax.Array,
+    *,
+    L: int,
+    q_cap: int = 128,
+) -> dict[str, jax.Array]:
+    """Traceable single-point engine body shared by the jitted entry point
+    and :class:`repro.taskq.sweep.TaskqSweep`.
+
+    ``cfg`` maps per-point runtime scalars/tables: ``J`` (file MB),
+    ``alpha``, ``r_max``, ``pol`` (int32 policy id), ``gk_max`` (int32
+    greedy chunk cap), ``h_k``/``h_n`` threshold tables. ``interarrivals``
+    (T,) float32 gaps; ``pool_idx`` (T,) int32 pre-sampled row draws;
+    ``pools`` (S, P, W) float32 per-chunk-size delay pools and
+    ``pool_sizes`` (S,) float32 their chunk sizes — grid-shared broadcast
+    arrays from :meth:`repro.core.traces.TraceStore.device_pools`. Only
+    ``L`` (the thread-state width) and ``q_cap`` (the backlog ring width)
+    are static; the task-lane count is the pool width W, so codes with
+    n > L are exact too (their excess tasks queue for threads freed by
+    their own siblings' completions — the pass-1 feedback).
+
+    Returns per-request (T,) arrays: ``total``/``queueing``/``service``
+    delays (queueing = first task start − arrival, matching §II-C's D_q)
+    and the chosen ``n``/``k``.
+    """
+    W = pools.shape[2]
+    n_cap = W
+    lane = jnp.arange(n_cap)
+    J = jnp.asarray(cfg["J"], jnp.float32)
+    alpha = jnp.asarray(cfg["alpha"], jnp.float32)
+    r_max = jnp.asarray(cfg["r_max"], jnp.float32)
+    pol = jnp.asarray(cfg["pol"], jnp.int32)
+    gk_max = jnp.asarray(cfg["gk_max"], jnp.int32)
+    h_k = jnp.asarray(cfg["h_k"], jnp.float32)
+    h_n = jnp.asarray(cfg["h_n"], jnp.float32)
+
+    def step(carry, inp):
+        t, b, ring, pos, q_ewma = carry
+        dt, idx = inp
+        t = t + dt
+
+        # ---- exact arrival-instant observables ---------------------------
+        idle = jnp.sum(b <= t).astype(jnp.int32)
+        q = jnp.sum(ring > t).astype(jnp.float32)
+
+        # ---- policy: threshold tables and greedy, selected by id ---------
+        q_new, n_t, k_t = tofec_threshold_step(q_ewma, q, h_k, h_n, r_max, alpha)
+        n_g, k_g = greedy_select(q, idle, gk_max, r_max)
+        is_greedy = pol == POL_GREEDY
+        n = jnp.where(is_greedy, n_g, n_t)
+        k = jnp.where(is_greedy, k_g, k_t)
+        k = jnp.minimum(k, jnp.int32(n_cap))
+        n = jnp.clip(n, k, jnp.int32(n_cap))
+        q_ewma = q_new  # EWMA tracked uniformly (inert for greedy points)
+
+        # ---- task delays from the shared trace pools ---------------------
+        s_idx = jnp.argmin(jnp.abs(pool_sizes - J / k.astype(jnp.float32)))
+        row = pools[s_idx, idx]  # one jointly-sampled thread batch (W,)
+        X = jnp.where(lane < n, row, _INF)
+
+        # ---- pass 1: FIFO assignment with own-completion feedback --------
+        def assign(m, st):
+            f, S, C = st
+            j = jnp.argmin(f)
+            s_m = jnp.maximum(t, f[j])
+            c_m = s_m + X[m]
+            live = m < n
+            S = S.at[m].set(jnp.where(live, s_m, _INF))
+            C = C.at[m].set(jnp.where(live, c_m, _INF))
+            f = jnp.where(live, f.at[j].set(c_m), f)
+            return f, S, C
+
+        _, S, C = jax.lax.fori_loop(
+            0, n_cap, assign, (b, jnp.full(n_cap, _INF), jnp.full(n_cap, _INF))
+        )
+
+        # ---- k-of-n completion -------------------------------------------
+        D = jnp.sort(C)[k - 1]
+
+        # ---- pass 2: replay with cancellation → new thread state ---------
+        def settle(m, f):
+            j = jnp.argmin(f)
+            started = (m < n) & (jnp.maximum(t, f[j]) < D)
+            return jnp.where(started, f.at[j].set(jnp.minimum(C[m], D)), f)
+
+        b = jax.lax.fori_loop(0, n_cap, settle, b)
+
+        # ---- bookkeeping -------------------------------------------------
+        a = S[0]  # admission = first task start (§II-C's T_1)
+        ring = ring.at[pos].set(a)
+        pos = (pos + 1) % q_cap
+        d_q = a - t
+        d_s = D - a
+        return (t, b, ring, pos, q_ewma), (d_q + d_s, d_q, d_s, n, k)
+
+    init = (
+        jnp.float32(0.0),
+        jnp.zeros(L, jnp.float32),
+        jnp.full(q_cap, -_INF),
+        jnp.int32(0),
+        jnp.float32(0.0),
+    )
+    _, (tot, dq, ds, ns, ks) = jax.lax.scan(
+        step, init, (interarrivals, pool_idx)
+    )
+    return {"total": tot, "queueing": dq, "service": ds, "n": ns, "k": ks}
+
+
+@functools.partial(jax.jit, static_argnames=("L", "q_cap"))
+def taskq_scan(
+    cfg,
+    interarrivals: jax.Array,
+    pool_idx: jax.Array,
+    pools: jax.Array,
+    pool_sizes: jax.Array,
+    *,
+    L: int,
+    q_cap: int = 128,
+) -> dict[str, jax.Array]:
+    """Jitted single-grid-point entry point (the serial-scan baseline of
+    ``benchmarks.kernel_bench.bench_taskq_engine``)."""
+    return taskq_scan_core(
+        cfg, interarrivals, pool_idx, pools, pool_sizes, L=L, q_cap=q_cap
+    )

@@ -1,0 +1,224 @@
+"""Vmapped task-level sweep: exact (λ × policy × seed) grids per launch.
+
+Mirrors :class:`repro.fleet.sweep.FleetSweep` — the same
+:class:`~repro.fleet.sweep.ChunkedVmapSweep` pow2-bucketed jit cache,
+chunked memory-bounded launches and compile observability — but each grid
+point runs the exact task-level engine (:func:`repro.taskq.engine.
+taskq_scan_core`) instead of the fluid scan, and the per-chunk-size delay
+pools ride every launch as **grid-shared broadcast arrays** (``in_axes
+None``): one device copy of the trace store serves the whole grid.
+
+Cases are plain :class:`repro.fleet.sweep.SweepCase` grids (reuse
+``grid_cases``), so a fleet grid re-runs on the exact engine unchanged —
+plus ``PolicySpec.greedy()`` points, which only this sweep accepts.
+Reductions reuse :func:`repro.fleet.frontier.frontier_points` unchanged
+(the result carries the same stacked outputs and per-case params), and
+:func:`write_taskq_artifact` emits the ``BENCH_taskq.json`` twin of the
+fleet artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.coding.codec import pow2_bucket
+from repro.core.traces import DevicePools
+from repro.fleet.sweep import ChunkedVmapSweep, SweepCase, SweepResult
+from repro.taskq.policies import encode_policy
+
+
+def taskq_streams(case: SweepCase, count: int, n_rows: int):
+    """One grid point's host-side draws: (interarrivals, pool row indices).
+
+    The draw order — workload gaps first, then row indices, from ONE
+    ``default_rng(case.seed)`` stream — is the contract both the sweep and
+    the oracle cross-validation tests rely on to feed identical randomness
+    to both engines.
+    """
+    rng = np.random.default_rng(case.seed)
+    inter = case.resolved_workload().interarrivals(rng, count)
+    idx = rng.integers(n_rows, size=count).astype(np.int32)
+    return inter, idx
+
+
+@dataclasses.dataclass
+class TaskqResult(SweepResult):
+    """Stacked per-request outputs for every exact grid point — the same
+    layout as the fluid sweep's :class:`repro.fleet.sweep.SweepResult`
+    (which it reuses wholesale), so the fleet's frontier reductions consume
+    it unchanged; here the delays are exact task-level simulations."""
+
+
+class TaskqSweep(ChunkedVmapSweep):
+    """Chunked, shape-bucketed vmapped sweep over exact task-level points.
+
+    ``q_cap`` bounds the backlog-length observable (see
+    :mod:`repro.taskq.engine`); all cases of one run must share ``L`` (the
+    thread-state width is structural). Compilations are keyed on (chunk,
+    pow2(T), L, q_cap, table lengths, pool shape) and observable via
+    ``stats`` — pinned in ``tests/test_taskq.py``.
+    """
+
+    def __init__(self, *, chunk: int = 64, t_floor: int | None = None,
+                 q_cap: int = 128):
+        super().__init__(chunk=chunk, t_floor=t_floor)
+        if q_cap < 1:
+            raise ValueError("q_cap must be >= 1")
+        self.q_cap = q_cap
+
+    # -- compilation cache --------------------------------------------------
+
+    def bucket_key(self, n_cases: int, count: int, L: int, hk_len: int,
+                   hn_len: int, pool_shape: tuple):
+        """The compilation-cache key a run with these shapes lands in."""
+        return (
+            min(pow2_bucket(n_cases), self.chunk),
+            pow2_bucket(count, self.t_floor),
+            L,
+            self.q_cap,
+            hk_len,
+            hn_len,
+            tuple(pool_shape),
+        )
+
+    def _build(self, key: tuple):
+        L, q_cap = key[2], key[3]
+
+        def one(cfg, inter, idx, pools, sizes):
+            from repro.taskq.engine import taskq_scan_core
+
+            return taskq_scan_core(cfg, inter, idx, pools, sizes, L=L, q_cap=q_cap)
+
+        # Pools and sizes broadcast: every grid row reads the one device copy.
+        return self._vmapped(one, in_axes=(0, 0, 0, None, None))
+
+    # -- the sweep ----------------------------------------------------------
+
+    def _stack_cfg(self, cases: list[SweepCase], hk_len: int, hn_len: int):
+        G = len(cases)
+        cfg = {
+            name: np.empty(G, np.float32)
+            for name in ("delta_bar", "delta_tilde", "psi_bar", "psi_tilde",
+                         "J", "L", "alpha", "r_max")
+        }
+        cfg["pol"] = np.empty(G, np.int32)
+        cfg["gk_max"] = np.empty(G, np.int32)
+        cfg["h_k"] = np.zeros((G, hk_len), np.float32)
+        cfg["h_n"] = np.zeros((G, hn_len), np.float32)
+        for i, case in enumerate(cases):
+            plan = (
+                self._plan_for(case.cls, case.L, case.policy.eq7_factor)
+                if case.policy.kind == "tofec" else None
+            )
+            enc = encode_policy(case.policy, case.cls, case.L, hk_len, hn_len, plan)
+            pr = case.cls.params
+            # delta/psi params ride along for the frontier's usage reduction
+            # (the engine itself reads delays from the trace pools).
+            cfg["delta_bar"][i] = pr.delta_bar
+            cfg["delta_tilde"][i] = pr.delta_tilde
+            cfg["psi_bar"][i] = pr.psi_bar
+            cfg["psi_tilde"][i] = pr.psi_tilde
+            cfg["J"][i] = case.cls.file_mb
+            cfg["L"][i] = case.L
+            cfg["alpha"][i] = enc.alpha
+            cfg["r_max"][i] = enc.r_max
+            cfg["pol"][i] = enc.pol
+            cfg["gk_max"][i] = enc.gk_max
+            cfg["h_k"][i] = enc.h_k
+            cfg["h_n"][i] = enc.h_n
+        return cfg
+
+    def run(self, cases: list[SweepCase], count: int,
+            pools: DevicePools) -> TaskqResult:
+        """Evaluate every grid point exactly over ``count`` arrivals.
+
+        Host side: per-case RNG streams (:func:`taskq_streams`) generate the
+        workload gaps and pool-row draws. Device side: ceil(G / chunk)
+        vmapped launches sharing one device copy of ``pools``.
+        """
+        if not cases:
+            raise ValueError("empty case grid")
+        Ls = {c.L for c in cases}
+        if len(Ls) != 1:
+            raise ValueError(f"all cases of one run must share L, got {sorted(Ls)}")
+        L = Ls.pop()
+        n_need = max(c.cls.n_max for c in cases)
+        if pools.pools.shape[2] < n_need:
+            raise ValueError(
+                f"pool width {pools.pools.shape[2]} cannot serve "
+                f"n_max={n_need}; re-export with "
+                f"TraceStore.device_pools(n_max={n_need})"
+            )
+        traces0, launches0 = self.stats.traces, self.stats.launches
+        hk_len = max(c.cls.k_max for c in cases) + 1
+        hn_len = n_need + 1
+        key = self.bucket_key(len(cases), count, L, hk_len, hn_len,
+                              pools.pools.shape)
+        chunk, T_b = key[0], key[1]
+
+        cfg = self._stack_cfg(cases, hk_len, hn_len)
+        G = len(cases)
+        inter = np.zeros((G, T_b), np.float32)
+        idx = np.zeros((G, T_b), np.int32)
+        for i, case in enumerate(cases):
+            it, ix = taskq_streams(case, count, pools.n_rows)
+            inter[i, :count] = it
+            idx[i, :count] = ix
+
+        fn = self._fn_for(key)
+        stacked = self._launch_chunks(
+            fn, cfg, (inter, idx), G, chunk, count,
+            broadcast=(pools.pools, pools.sizes_mb),
+        )
+        return TaskqResult(
+            cases=list(cases),
+            out=stacked,
+            cfg=cfg,
+            count=count,
+            compiles=self.stats.traces - traces0,
+            launches=self.stats.launches - launches0,
+        )
+
+
+def write_taskq_artifact(
+    path: str,
+    result: TaskqResult,
+    *,
+    warmup_frac: float = 0.05,
+    extra: dict | None = None,
+) -> dict:
+    """Reduce an exact sweep and write the ``BENCH_taskq.json`` artifact.
+
+    Reuses the fleet's frontier reductions (per-point delay stats, per-policy
+    capacities, convergence, headline ratios) on the exact per-request
+    delays — the trace-driven twin of ``BENCH_fleet.json``.
+    """
+    from repro.fleet.frontier import (
+        capacity_estimates,
+        convergence_stats,
+        frontier_points,
+        headline_ratios,
+    )
+
+    points = frontier_points(result, warmup_frac)
+    artifact = {
+        "schema": "repro.taskq/BENCH_taskq/v1",
+        "grid_size": len(result.cases),
+        "count": result.count,
+        "compiles": result.compiles,
+        "launches": result.launches,
+        "points": [p.to_dict() for p in points],
+        "capacity_req_s": capacity_estimates(points),
+        "convergence": convergence_stats(result, warmup_frac),
+        "headline": headline_ratios(points),
+    }
+    if extra:
+        artifact.update(extra)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=1)
+    return artifact

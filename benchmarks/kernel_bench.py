@@ -379,6 +379,119 @@ def bench_taskq_engine(count: int = 1024, grids: tuple = (8, 64)) -> list[str]:
     return rows
 
 
+def bench_shard_scaling(count: int = 1024, grid: int = 1024,
+                        big_grid: int = 100_000, big_count: int = 512,
+                        devices: tuple = (1, 2, 4, 8)) -> list[str]:
+    """Mesh-sharded streaming fleet sweep: device scaling + memory bound.
+
+    For each device count (host virtual devices when launched under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``; counts beyond
+    the available devices are skipped): time the sharded **streamed** sweep
+    on a mixed-policy grid and assert its frontier is a bit-exact equal of
+    the single-device **materialized** baseline. Then a ``big_grid``-point
+    streamed run demonstrates the O(chunk × devices) memory bound — no
+    (G, T) block ever materializes. Writes ``BENCH_shard.json``.
+
+    Speedup is physical: with fewer host cores than virtual devices (CI
+    runners), sharding only adds collective overhead — the artifact records
+    ``host_cores`` so readers can tell scaling rows from placebo rows, and
+    the >1.8x @ 4-device bar is only asserted when 4 real cores exist.
+    """
+    import json as _json
+    import os as _os
+
+    from repro.fleet import FleetSweep, PolicySpec, frontier_points, grid_cases
+    from benchmarks.common import RESULTS_DIR
+
+    cls = RequestClass("read3mb", 3.0, PAPER_READ_3MB, k_max=6, r_max=2.0, n_max=12)
+    L = 16
+    pols = [PolicySpec.tofec(), PolicySpec.static(6, 3), PolicySpec.fixedk(4)]
+
+    def mixed_grid(g: int) -> list:
+        lams = np.linspace(5.0, 65.0, max(-(-g // (len(pols) * 4)), 1))
+        return grid_cases(lams, pols, range(4), cls, L)[:g]
+
+    cases = mixed_grid(grid)
+    n_dev = len(jax.devices())
+    rows: list[str] = []
+
+    # Single-device materialized baseline: the pre-shard path, timed AND the
+    # bit-exactness reference for every sharded-streaming run.
+    base = FleetSweep(chunk=128)
+    base.run(cases[: min(256, grid)], count)  # warm the shape bucket
+    t0 = time.monotonic()
+    ref = base.run(cases, count)
+    jax.block_until_ready(ref.out)
+    dt_base = time.monotonic() - t0
+    ref_pts = [p.to_dict() for p in frontier_points(ref)]
+    timer = BenchTimer(f"shard_baseline_g{grid}_t{count}", calls=1)
+    timer.elapsed = dt_base
+    rows.append(timer.row(f"materialized|devices=1|launches={ref.launches}"))
+
+    scaling, dt_one = [], None
+    for d in devices:
+        if d > n_dev:
+            continue
+        sweep = FleetSweep(chunk=128, mesh=d)
+        sweep.run(cases[: min(256, grid)], count, stream=True)
+        t0 = time.monotonic()
+        res = sweep.run(cases, count, stream=True)
+        dt = time.monotonic() - t0
+        assert res.out == {}  # streamed: no (G, T) block
+        pts = [p.to_dict() for p in frontier_points(res)]
+        assert _json.dumps(pts) == _json.dumps(ref_pts), \
+            f"sharded-streaming frontier diverged at d={d}"
+        dt_one = dt if d == 1 else dt_one
+        speedup = (dt_one or dt) / max(dt, 1e-9)
+        scaling.append({"devices": d, "ms": 1e3 * dt, "speedup_vs_1dev": speedup,
+                        "bit_exact": True})
+        timer = BenchTimer(f"shard_stream_d{d}_g{grid}_t{count}", calls=1)
+        timer.elapsed = dt
+        rows.append(timer.row(f"speedup={speedup:.2f}x|bit_exact=True"
+                              f"|launches={res.launches}"))
+
+    cores = _os.cpu_count() or 1
+    if cores >= 4 and n_dev >= 4 and grid >= 1024:
+        at4 = next(s["speedup_vs_1dev"] for s in scaling if s["devices"] == 4)
+        assert at4 > 1.8, f"4-device speedup {at4:.2f}x <= 1.8x with {cores} cores"
+
+    # Streamed-memory bound: a big grid whose materialized block would be
+    # G × T × 20 B never exists — peak device residency is chunk-sized.
+    big = mixed_grid(big_grid)
+    d_big = max(d for d in devices if d <= n_dev)
+    sweep = FleetSweep(chunk=128, mesh=None if d_big == 1 else d_big)
+    sweep.run(big[: min(256, big_grid)], big_count, stream=True)  # warm
+    t0 = time.monotonic()
+    res = sweep.run(big, big_count, stream=True)
+    dt_big = time.monotonic() - t0
+    assert res.out == {} and len(frontier_points(res)) == big_grid
+    mat_mb = big_grid * big_count * 20 / 2**20  # 3×f32 + 2×i32 per request
+    str_mb = (128 * d_big * big_count * 20 + big_grid * 15 * 4) / 2**20
+    timer = BenchTimer(f"shard_stream_big_g{big_grid}_t{big_count}", calls=1)
+    timer.elapsed = dt_big
+    rows.append(timer.row(
+        f"devices={d_big}|req_per_s={big_grid * big_count / dt_big:.0f}"
+        f"|materialized_would_be={mat_mb:.0f}MB"
+        f"|streamed_peak~{str_mb:.0f}MB"))
+
+    _os.makedirs(RESULTS_DIR, exist_ok=True)
+    artifact = {
+        "schema": "repro.fleet/BENCH_shard/v1",
+        "grid": grid, "count": count,
+        "big_grid": big_grid, "big_count": big_count,
+        "host_devices": n_dev, "host_cores": cores,
+        "baseline_materialized_ms": 1e3 * dt_base,
+        "scaling": scaling,
+        "big_grid_ms": 1e3 * dt_big,
+        "big_grid_devices": d_big,
+        "materialized_would_be_mb": mat_mb,
+        "streamed_peak_mb": str_mb,
+    }
+    with open(_os.path.join(RESULTS_DIR, "BENCH_shard.json"), "w") as f:
+        _json.dump(artifact, f, indent=1)
+    return rows
+
+
 def bench_ckpt_encode(leaf_mb: int = 1) -> list[str]:
     rng = np.random.default_rng(1)
     payload = rng.integers(0, 256, size=leaf_mb * 2**20, dtype=np.uint8)
@@ -400,5 +513,6 @@ ALL_KERNEL = [
     bench_fleet_sweep,
     bench_multiclass_sweep,
     bench_taskq_engine,
+    bench_shard_scaling,
     bench_ckpt_encode,
 ]

@@ -15,6 +15,10 @@ launches:
 * :mod:`repro.fleet.frontier` — on-device reductions to throughput-delay
   frontiers, delay percentiles, capacity estimates, adaptation-convergence
   stats, and the ``BENCH_fleet.json`` artifact writer.
+* :mod:`repro.fleet.shard` — ``shard_map`` scale-out of the grid axis
+  across a device mesh plus streaming per-chunk frontier reductions
+  (``run(..., stream=...)``), shared with :mod:`repro.sched` and
+  :mod:`repro.taskq` through the common chunked-sweep base.
 """
 
 from repro.fleet.frontier import (
@@ -25,6 +29,11 @@ from repro.fleet.frontier import (
     frontier_points,
     headline_ratios,
     write_fleet_artifact,
+)
+from repro.fleet.shard import (
+    StreamedStats,
+    StreamSpec,
+    resolve_grid_mesh,
 )
 from repro.fleet.sweep import (
     FleetSweep,
@@ -71,4 +80,7 @@ __all__ = [
     "convergence_stats",
     "headline_ratios",
     "write_fleet_artifact",
+    "StreamSpec",
+    "StreamedStats",
+    "resolve_grid_mesh",
 ]

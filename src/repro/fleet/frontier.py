@@ -14,17 +14,12 @@ trajectory.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import json
 import os
-import types
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import queueing
-from repro.fleet.stats import masked_percentiles
+from repro.fleet import stats
 
 
 @dataclasses.dataclass
@@ -52,35 +47,17 @@ class FrontierPoint:
         return dataclasses.asdict(self)
 
 
-@functools.partial(jax.jit, static_argnames=("w",))
-def _reduce_block(out, delta_bar, delta_tilde, psi_bar, psi_tilde, J, *, w: int):
-    """One jitted on-device reduction over the whole (G, T) result block.
-
-    Module-level (with the warmup cut static) so repeated frontier
-    reductions of same-shaped sweeps hit the compile cache.
-    """
-    tot = out["total"][:, w:]
-    nf = out["n"][:, w:].astype(jnp.float32)
-    kf = out["k"][:, w:].astype(jnp.float32)
-    r = nf / kf
-    params = types.SimpleNamespace(
-        delta_bar=delta_bar[:, None], delta_tilde=delta_tilde[:, None],
-        psi_bar=psi_bar[:, None], psi_tilde=psi_tilde[:, None],
-    )
-    usage = queueing.usage(params, J[:, None], kf, r)  # Eq.3, broadcast
-    pct = masked_percentiles(tot, [50.0, 90.0, 95.0, 99.0])
-    return {
-        "mean": jnp.mean(tot, axis=1),
-        "std": jnp.std(tot, axis=1),
-        "p50": pct[:, 0], "p90": pct[:, 1], "p95": pct[:, 2], "p99": pct[:, 3],
-        "mean_queueing": jnp.mean(out["queueing"][:, w:], axis=1),
-        "mean_k": jnp.mean(kf, axis=1),
-        "mean_n": jnp.mean(nf, axis=1),
-        "mean_usage": jnp.mean(usage, axis=1),
-    }
+#: The whole-block reduction is the shared kernel in :mod:`repro.fleet.stats`
+#: — one implementation serves the materialized path here and the per-chunk
+#: streaming fold (:func:`repro.fleet.sweep.frontier_fold`), which is what
+#: makes streamed statistics bit-exact equals of materialized ones.
+_reduce_block = stats.frontier_block_reduce
 
 
 def _reduced(result, warmup_frac: float):
+    streamed = getattr(result, "streamed", None)
+    if streamed is not None:
+        return streamed.require(warmup_frac)
     cfg = result.cfg
     red = _reduce_block(
         result.out, cfg["delta_bar"], cfg["delta_tilde"], cfg["psi_bar"],
@@ -148,16 +125,35 @@ def convergence_stats(result, warmup_frac: float = 0.05) -> list[dict]:
     ``settle_frac``: fraction of the (post-warmup) horizon after which the
     chosen k never leaves ±1 of its final mode; ``modal_frac``: fraction of
     requests served exactly at the modal k. Static policies settle at 0.
+
+    Streamed results read the convergence integers the per-chunk fold
+    accumulated (:func:`repro.fleet.stats.convergence_reduce`) and finish
+    the exact fractions here — identical values, no (G, T) block.
     """
-    ks = np.asarray(result.out["k"])
     w = int(result.count * warmup_frac)
-    stats = []
+    horizon = max(result.count - w, 1)
+    streamed = getattr(result, "streamed", None)
+    if streamed is not None:
+        red = streamed.require(warmup_frac)
+        return [
+            {
+                "policy": case.policy.name,
+                "lam": case.lam,
+                "seed": case.seed,
+                "modal_k": int(red["modal_k"][i]),
+                "modal_frac": int(red["modal_count"][i]) / horizon,
+                "settle_frac": int(red["settle_idx"][i]) / horizon,
+            }
+            for i, case in enumerate(result.cases)
+        ]
+    ks = np.asarray(result.out["k"])
+    out = []
     for i, case in enumerate(result.cases):
         k_i = ks[i, w:]
         modal = int(np.bincount(k_i).argmax())
         off = np.abs(k_i.astype(np.int64) - modal) > 1
         settle_idx = int(np.max(np.nonzero(off)[0])) + 1 if off.any() else 0
-        stats.append({
+        out.append({
             "policy": case.policy.name,
             "lam": case.lam,
             "seed": case.seed,
@@ -165,7 +161,7 @@ def convergence_stats(result, warmup_frac: float = 0.05) -> list[dict]:
             "modal_frac": float((k_i == modal).mean()),
             "settle_frac": settle_idx / max(len(k_i), 1),
         })
-    return stats
+    return out
 
 
 def headline_ratios(points: list[FrontierPoint]) -> dict:

@@ -225,14 +225,21 @@ def tenant_cases(
 
 @dataclasses.dataclass
 class SweepStats:
-    """Observability for the bounded-compile claim (asserted in tests)."""
+    """Observability for the bounded-compile claim (asserted in tests).
+
+    ``by_mesh`` splits the trace count by the mesh shape the compilation
+    was built for — ``()`` for the single-device path, ``(D,)`` for a
+    D-device grid mesh — so the mesh-keyed bucket rule is pinnable.
+    """
 
     traces: int = 0  # distinct sweep compilations (incremented at trace time)
     launches: int = 0
     cases: int = 0
+    by_mesh: dict = dataclasses.field(default_factory=dict)
 
     def reset(self) -> None:
         self.traces = self.launches = self.cases = 0
+        self.by_mesh.clear()
 
 
 class ChunkedVmapSweep:
@@ -248,31 +255,73 @@ class ChunkedVmapSweep:
     ``chunk`` bounds the grid points per launch (memory bound); ``t_floor``
     floors the pow2 time-axis bucket so nearby horizon lengths share a
     compilation, mirroring ``Codec.B_FLOOR``.
+
+    ``mesh`` (None | int device count | 1-D jax Mesh) shards every launch's
+    chunk axis across a device mesh via :func:`repro.fleet.shard.
+    shard_grid`: axis-0 operands split along the grid axis, ``in_axes=None``
+    broadcast operands replicate. Compilations are keyed additionally on
+    the mesh shape, and the effective chunk is rounded up to a mesh-size
+    multiple so every device owns an equal slice.
     """
 
     T_FLOOR = 512
 
-    def __init__(self, *, chunk: int = 64, t_floor: int | None = None):
+    def __init__(self, *, chunk: int = 64, t_floor: int | None = None,
+                 mesh=None):
         if chunk < 1:
             raise ValueError("chunk must be >= 1")
+        from repro.fleet.shard import resolve_grid_mesh
+
         self.chunk = chunk
         self.t_floor = t_floor or self.T_FLOOR
+        self.mesh = resolve_grid_mesh(mesh)
         self.stats = SweepStats()
         self._fns: dict[tuple, object] = {}
         self._plans: dict[tuple, ClassPlan] = {}
 
-    def _vmapped(self, one, in_axes=0):
+    @property
+    def mesh_shape(self) -> tuple:
+        """Device-mesh shape key: () single-device, (D,) for a grid mesh."""
+        return () if self.mesh is None else tuple(self.mesh.devices.shape)
+
+    @property
+    def mesh_size(self) -> int:
+        return 1 if self.mesh is None else int(self.mesh.devices.size)
+
+    def _chunk_bucket(self, n_cases: int) -> int:
+        """Effective per-launch chunk: pow2-bucketed grid size capped at
+        ``chunk``, then rounded up to a mesh-size multiple so ``shard_map``
+        can split the chunk axis evenly across devices."""
+        c = min(pow2_bucket(n_cases), self.chunk)
+        d = self.mesh_size
+        return -(-c // d) * d
+
+    def _vmapped(self, one, in_axes: tuple):
         """jit(vmap(one, in_axes)) with a trace-time counter feeding
         ``stats``. ``in_axes`` entries of ``None`` mark grid-shared broadcast
         arguments (e.g. the taskq engine's trace pools) that every grid row
-        reads without a per-row copy."""
+        reads without a per-row copy; on a mesh they are the replicated
+        operands while axis-0 entries shard along the grid axis.
+
+        Per-chunk operands (the axis-0 args) are donated: each chunk uploads
+        fresh config/stream buffers that nothing re-reads after the launch,
+        so XLA may reuse their device memory for the outputs. Broadcast
+        operands live across launches and are never donated.
+        """
         import jax
 
         def fn(*args):
             self.stats.traces += 1  # runs at trace time only
+            key = self.mesh_shape
+            self.stats.by_mesh[key] = self.stats.by_mesh.get(key, 0) + 1
             return jax.vmap(one, in_axes=in_axes)(*args)
 
-        return jax.jit(fn)
+        donate = tuple(i for i, ax in enumerate(in_axes) if ax == 0)
+        if self.mesh is not None:
+            from repro.fleet.shard import shard_grid
+
+            fn = shard_grid(fn, self.mesh, in_axes)
+        return jax.jit(fn, donate_argnums=donate)
 
     def _build(self, key: tuple):
         raise NotImplementedError
@@ -290,32 +339,98 @@ class ChunkedVmapSweep:
             plan = self._plans[key] = build_class_plan(cls, L, eq7_factor=eq7_factor)
         return plan
 
-    def _launch_chunks(self, fn, cfg, streams: tuple, G: int, chunk: int, count: int,
-                       broadcast: tuple = ()):
+    def _launch_chunks(self, fn, cfg, streams, G: int, chunk: int, count: int,
+                       broadcast: tuple = (), fold=None):
         """ceil(G / chunk) launches over (cfg, *streams, *broadcast); returns
         the stacked (G, count) output dict. Tail-chunk rows are repetitions
         of row ``lo`` and sliced off before stacking, so padding never leaks.
         ``broadcast`` arguments are passed whole to every launch (no grid
         axis) — they must line up with ``None`` entries of the builder's
-        ``in_axes``."""
+        ``in_axes``.
+
+        ``streams`` is a callable ``(idx) -> tuple of (chunk, ...) blocks``
+        generating one chunk's host-side streams on demand from the padded
+        case-index array — host memory never holds more than one chunk of
+        workload draws, which is what lets a 1e5-point grid run at all.
+        (A tuple of full (G, ...) arrays is still accepted and gathered
+        per chunk.)
+
+        The chunk gather rides one preallocated index buffer (no per-chunk
+        concatenate), and the per-chunk device uploads are donated to the
+        launch (see :meth:`_vmapped`), so peak memory stays at one chunk's
+        working set on both host and device.
+
+        ``fold`` streams: called per launch as ``fold(out, cfg_np, streams_np)``
+        with the chunk's outputs sliced to ``[:, :count]`` and the chunk's
+        host-side config/stream rows, it returns fixed-size per-row
+        statistics which are stacked *instead of* the raw (chunk, T) block —
+        the block itself is dropped before the next launch, so a streamed
+        sweep never materializes O(G × T).
+        """
+        import warnings
+
         import jax.numpy as jnp
 
         outs = []
         bcast = tuple(jnp.asarray(b) for b in broadcast)
+        idx = np.empty(chunk, np.intp)  # preallocated chunk-gather indices
         for lo in range(0, G, chunk):
             hi = min(lo + chunk, G)
-            idx = np.arange(lo, hi)
-            if hi - lo < chunk:  # pad the tail chunk by repetition
-                idx = np.concatenate([idx, np.full(chunk - (hi - lo), lo)])
-            cfg_c = {name: jnp.asarray(v[idx]) for name, v in cfg.items()}
-            out = fn(cfg_c, *(jnp.asarray(s[idx]) for s in streams), *bcast)
+            idx[: hi - lo] = np.arange(lo, hi)
+            idx[hi - lo:] = lo  # pad the tail chunk by repetition
+            cfg_np = {name: v[idx] for name, v in cfg.items()}
+            streams_np = (
+                streams(idx) if callable(streams)
+                else tuple(s[idx] for s in streams)
+            )
+            with warnings.catch_warnings():
+                # Donated operands with no same-sized output (e.g. the
+                # (chunk, T, n_max) Exp draws) cannot be aliased; XLA warns
+                # about that expected partial usability on every compile.
+                warnings.filterwarnings(
+                    "ignore", message="Some donated buffers were not usable"
+                )
+                out = fn({name: jnp.asarray(v) for name, v in cfg_np.items()},
+                         *(jnp.asarray(s) for s in streams_np), *bcast)
             self.stats.launches += 1
-            outs.append({name: v[: hi - lo, :count] for name, v in out.items()})
+            if fold is None:
+                outs.append({name: v[: hi - lo, :count] for name, v in out.items()})
+            else:
+                red = fold({name: v[:, :count] for name, v in out.items()},
+                           cfg_np, streams_np)
+                outs.append({name: v[: hi - lo] for name, v in red.items()})
         self.stats.cases += G
         return {
             name: jnp.concatenate([o[name] for o in outs], axis=0)
             for name in outs[0]
         }
+
+
+def frontier_fold(w: int, bins: int):
+    """Per-chunk streaming fold for fleet-style (single-class) sweeps.
+
+    Runs the SAME jitted reduction kernels the materialized frontier uses
+    (:func:`repro.fleet.stats.frontier_block_reduce` for the delay/usage
+    statistics, :func:`repro.fleet.stats.convergence_reduce` for the
+    adaptation integers) on one (chunk, count) block at a time — per-row
+    reductions are leading-batch invariant, so the streamed statistics are
+    bit-exact equals of the materialized ones. ``w`` is the warmup cut,
+    ``bins`` any bound exceeding every chosen k (table length works).
+    """
+    import jax.numpy as jnp
+
+    from repro.fleet.stats import convergence_reduce, frontier_block_reduce
+
+    def fold(out, cfg_np, streams_np):
+        red = dict(frontier_block_reduce(
+            out, jnp.asarray(cfg_np["delta_bar"]),
+            jnp.asarray(cfg_np["delta_tilde"]), jnp.asarray(cfg_np["psi_bar"]),
+            jnp.asarray(cfg_np["psi_tilde"]), jnp.asarray(cfg_np["J"]), w=w,
+        ))
+        red.update(convergence_reduce(out["k"], w=w, bins=bins))
+        return red
+
+    return fold
 
 
 @dataclasses.dataclass
@@ -326,6 +441,11 @@ class SweepResult:
     ``service`` delays (float32) and the chosen ``n``/``k`` (int32) — kept
     on device so :mod:`repro.fleet.frontier` reduces them without a host
     round-trip. ``cfg`` is the stacked per-case config (params + tables).
+
+    A **streamed** run (``run(..., stream=...)``) never materializes the
+    (G, count) block: ``out`` is empty and ``streamed`` carries the running
+    frontier reduction (:class:`repro.fleet.shard.StreamedStats`) that the
+    frontier consumers read instead.
     """
 
     cases: list[SweepCase]
@@ -334,6 +454,7 @@ class SweepResult:
     count: int
     compiles: int
     launches: int
+    streamed: object = None  # StreamedStats for streamed runs
 
     def to_numpy(self) -> dict[str, np.ndarray]:
         return {k: np.asarray(v) for k, v in self.out.items()}
@@ -347,11 +468,12 @@ class FleetSweep(ChunkedVmapSweep):
     def bucket_key(self, n_cases: int, count: int, n_max: int, hk_len: int, hn_len: int):
         """The compilation-cache key a run with these shapes lands in."""
         return (
-            min(pow2_bucket(n_cases), self.chunk),
+            self._chunk_bucket(n_cases),
             pow2_bucket(count, self.t_floor),
             n_max,
             hk_len,
             hn_len,
+            self.mesh_shape,
         )
 
     def _build(self, key: tuple):
@@ -369,7 +491,7 @@ class FleetSweep(ChunkedVmapSweep):
                 p, cfg["h_k"], cfg["h_n"], cfg["r_max"], inter, exps, n_max=n_max
             )
 
-        return self._vmapped(one)
+        return self._vmapped(one, in_axes=(0, 0, 0))
 
     # -- the sweep ----------------------------------------------------------
 
@@ -403,15 +525,23 @@ class FleetSweep(ChunkedVmapSweep):
             cfg["h_n"][i, : len(h_n)] = h_n
         return cfg
 
-    def run(self, cases: list[SweepCase], count: int) -> SweepResult:
+    def run(self, cases: list[SweepCase], count: int, *,
+            stream=None) -> SweepResult:
         """Evaluate every grid point over ``count`` arrivals.
 
         Host side: per-case RNG streams generate the workload arrays.
         Device side: ceil(G / chunk) vmapped launches, each hitting the
         shape-bucket cache.
+
+        ``stream`` (True or a :class:`repro.fleet.shard.StreamSpec`) folds
+        each chunk into running frontier statistics instead of stacking the
+        raw (G, count) block — see :mod:`repro.fleet.shard`.
         """
         if not cases:
             raise ValueError("empty case grid")
+        from repro.fleet.shard import StreamedStats, resolve_stream
+
+        spec = resolve_stream(stream)
         traces0, launches0 = self.stats.traces, self.stats.launches
         n_max = max(c.cls.n_max for c in cases)
         hk_len = max(c.cls.k_max for c in cases) + 1
@@ -421,23 +551,40 @@ class FleetSweep(ChunkedVmapSweep):
 
         cfg = self._stack_cfg(cases, hk_len, hn_len)
         G = len(cases)
-        inter = np.zeros((G, T_b), np.float32)
-        exps = np.zeros((G, T_b, n_max), np.float32)
-        for i, case in enumerate(cases):
-            rng = np.random.default_rng(case.seed)
-            it, ex = case.resolved_workload().device_arrays(rng, count, case.cls.n_max)
-            inter[i, :count] = it
-            # Classes with smaller n_max leave trailing Exp columns at zero;
-            # the scan masks draws at j >= k, so the padding never enters.
-            exps[i, :count, : case.cls.n_max] = ex
+
+        def chunk_streams(idx):
+            inter = np.zeros((len(idx), T_b), np.float32)
+            exps = np.zeros((len(idx), T_b, n_max), np.float32)
+            for j, i in enumerate(idx):
+                if j and i == idx[0]:  # tail pad: repeat the chunk's row 0
+                    inter[j], exps[j] = inter[0], exps[0]
+                    continue
+                case = cases[i]
+                rng = np.random.default_rng(case.seed)
+                it, ex = case.resolved_workload().device_arrays(
+                    rng, count, case.cls.n_max)
+                inter[j, :count] = it
+                # Classes with smaller n_max leave trailing Exp columns at
+                # zero; the scan masks draws at j >= k, so padding never
+                # enters.
+                exps[j, :count, : case.cls.n_max] = ex
+            return inter, exps
 
         fn = self._fn_for(key)
-        stacked = self._launch_chunks(fn, cfg, (inter, exps), G, chunk, count)
+        fold = (
+            frontier_fold(int(count * spec.warmup_frac), hn_len)
+            if spec else None
+        )
+        stacked = self._launch_chunks(fn, cfg, chunk_streams, G, chunk, count,
+                                      fold=fold)
         return SweepResult(
             cases=list(cases),
-            out=stacked,
+            out={} if spec else stacked,
             cfg=cfg,
             count=count,
             compiles=self.stats.traces - traces0,
             launches=self.stats.launches - launches0,
+            streamed=(
+                StreamedStats(spec.warmup_frac, count, stacked) if spec else None
+            ),
         )

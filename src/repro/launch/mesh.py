@@ -21,3 +21,21 @@ def make_host_mesh():
     """Whatever devices exist, as a 1-D 'data' mesh (tests/examples)."""
     n = len(jax.devices())
     return jax.make_mesh((n,), ("data",))
+
+
+def make_grid_mesh(n: int | None = None):
+    """First ``n`` devices (default: all) as a 1-D ``'grid'`` mesh.
+
+    The sweep engines (:mod:`repro.fleet.shard`) partition their stacked
+    grid-case axis over this mesh with ``shard_map``; a submesh over a
+    device subset lets one process bench 1/2/4/... device scaling from the
+    same pool of (possibly ``--xla_force_host_platform_device_count``
+    virtual) devices.
+    """
+    import numpy as np
+
+    devices = jax.devices()
+    n = len(devices) if n is None else int(n)
+    if not 1 <= n <= len(devices):
+        raise ValueError(f"need 1 <= n <= {len(devices)} devices, got {n}")
+    return jax.sharding.Mesh(np.asarray(devices[:n]), ("grid",))

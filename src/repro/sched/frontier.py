@@ -48,20 +48,30 @@ def _reduce_multiclass(out, *, C: int, w: int):
         mask = ids == c
         cnt = jnp.sum(mask, axis=1)
         safe = jnp.maximum(cnt, 1).astype(jnp.float32)
+
+        def masked_mean(x):
+            # A class with no post-warmup arrivals has no statistics: NaN,
+            # matching masked_percentiles — not a silent 0.0.
+            return jnp.where(cnt > 0, jnp.sum(jnp.where(mask, x, 0.0), axis=1) / safe,
+                             jnp.nan)
+
         pct = masked_percentiles(tot, qs, mask)  # (G, 4)
         return {
             "count": cnt,
-            "mean": jnp.sum(jnp.where(mask, tot, 0.0), axis=1) / safe,
+            "mean": masked_mean(tot),
             "p50": pct[:, 0], "p90": pct[:, 1], "p95": pct[:, 2], "p99": pct[:, 3],
-            "mean_queueing": jnp.sum(jnp.where(mask, dq, 0.0), axis=1) / safe,
-            "mean_k": jnp.sum(jnp.where(mask, kf, 0.0), axis=1) / safe,
-            "mean_n": jnp.sum(jnp.where(mask, nf, 0.0), axis=1) / safe,
+            "mean_queueing": masked_mean(dq),
+            "mean_k": masked_mean(kf),
+            "mean_n": masked_mean(nf),
         }
 
     per = [one_class(c) for c in range(C)]
     red = {name: jnp.stack([p[name] for p in per], axis=1) for name in per[0]}  # (G, C)
     red["agg_mean"] = jnp.mean(tot, axis=1)
-    red["agg_p99"] = jnp.percentile(tot, 99.0, axis=1)
+    # Lower interpolation, like the per-class percentiles: a pure sort +
+    # gather stays bitwise identical under any mesh sharding of the grid
+    # axis, where linear interpolation picks up layout-dependent rounding.
+    red["agg_p99"] = jnp.percentile(tot, 99.0, axis=1, method="lower")
     return red
 
 
@@ -87,10 +97,18 @@ class MulticlassPoint:
 
 
 def multiclass_points(result, warmup_frac: float = 0.05) -> list[MulticlassPoint]:
-    """Per-grid-point aggregate + per-class statistics, reduced on device."""
-    C = max(len(case.mix.classes) for case in result.cases)
-    red = _reduce_multiclass(result.out, C=C, w=int(result.count * warmup_frac))
-    red = {k: np.asarray(v) for k, v in red.items()}
+    """Per-grid-point aggregate + per-class statistics, reduced on device.
+
+    Streamed results (``SchedSweep.run(..., stream=...)``) reuse the
+    statistics the per-chunk fold already accumulated — same values, no
+    materialized (G, T) block."""
+    streamed = getattr(result, "streamed", None)
+    if streamed is not None:
+        red = streamed.require(warmup_frac)
+    else:
+        C = max(len(case.mix.classes) for case in result.cases)
+        red = _reduce_multiclass(result.out, C=C, w=int(result.count * warmup_frac))
+        red = {k: np.asarray(v) for k, v in red.items()}
     points = []
     for i, case in enumerate(result.cases):
         classes = []

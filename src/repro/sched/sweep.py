@@ -123,6 +123,29 @@ def sched_cases(mixes, disciplines, seeds, *, policy=None, L: int = 16) -> list[
     ]
 
 
+def multiclass_fold(w: int, C: int, count: int):
+    """Per-chunk streaming fold for joint multi-class sweeps.
+
+    Runs the SAME jitted per-class reduction the materialized path uses
+    (:func:`repro.sched.frontier._reduce_multiclass`) on one (chunk, count)
+    block at a time, rebuilding the chunk's ``cls_ids`` from the host-side
+    class-id stream (the second stream operand). Per-row reductions are
+    leading-batch invariant, so the streamed per-class statistics are
+    bit-exact equals of the materialized ones.
+    """
+    import jax.numpy as jnp
+
+    from repro.sched.frontier import _reduce_multiclass
+
+    def fold(out, cfg_np, streams_np):
+        ids_c = streams_np[1][:, :count]  # (chunk, count) class-id rows
+        return dict(_reduce_multiclass(
+            {**out, "cls_ids": jnp.asarray(ids_c)}, C=C, w=w,
+        ))
+
+    return fold
+
+
 @dataclasses.dataclass
 class SchedResult:
     """Stacked per-request outputs for every joint grid point.
@@ -130,7 +153,9 @@ class SchedResult:
     ``out`` holds (G, count) device arrays (``total``/``queueing``/
     ``service`` float32, ``n``/``k`` int32) plus ``cls_ids`` (G, count)
     int32 — kept on device so :mod:`repro.sched.frontier` masks per-class
-    reductions without a host round-trip.
+    reductions without a host round-trip. A **streamed** run leaves ``out``
+    empty and carries the running per-class reduction in ``streamed``
+    (:class:`repro.fleet.shard.StreamedStats`) instead.
     """
 
     cases: list[SchedCase]
@@ -139,6 +164,7 @@ class SchedResult:
     count: int
     compiles: int
     launches: int
+    streamed: object = None  # StreamedStats for streamed runs
 
     def to_numpy(self) -> dict[str, np.ndarray]:
         return {k: np.asarray(v) for k, v in self.out.items()}
@@ -160,12 +186,13 @@ class SchedSweep(ChunkedVmapSweep):
                    hk_len: int, hn_len: int):
         """The compilation-cache key a run with these shapes lands in."""
         return (
-            min(pow2_bucket(n_cases), self.chunk),
+            self._chunk_bucket(n_cases),
             pow2_bucket(count, self.t_floor),
             C,
             n_max,
             hk_len,
             hn_len,
+            self.mesh_shape,
         )
 
     def _build(self, key: tuple):
@@ -184,7 +211,7 @@ class SchedSweep(ChunkedVmapSweep):
                 inter, cls_ids, exps, n_max=n_max,
             )
 
-        return self._vmapped(one)
+        return self._vmapped(one, in_axes=(0, 0, 0, 0))
 
     # -- the sweep ----------------------------------------------------------
 
@@ -225,18 +252,26 @@ class SchedSweep(ChunkedVmapSweep):
                 cfg["h_n"][i, c, : len(h_n)] = h_n
         return cfg
 
-    def run(self, cases: list[SchedCase], count: int) -> SchedResult:
+    def run(self, cases: list[SchedCase], count: int, *,
+            stream=None) -> SchedResult:
         """Evaluate every joint grid point over ``count`` merged arrivals.
 
         Host side: per-case RNG streams generate merged interarrivals,
         exponential draws and class-id streams (same plumbing as the fleet:
         one ``default_rng(seed)`` per case). Device side: ceil(G / chunk)
         vmapped launches hitting the shape-bucket cache.
+
+        ``stream`` (True or a :class:`repro.fleet.shard.StreamSpec`) folds
+        each chunk into the per-class frontier statistics on device instead
+        of stacking the (G, count) block — see :mod:`repro.fleet.shard`.
         """
         if not cases:
             raise ValueError("empty case grid")
         import jax.numpy as jnp
 
+        from repro.fleet.shard import StreamedStats, resolve_stream
+
+        spec = resolve_stream(stream)
         traces0, launches0 = self.stats.traces, self.stats.launches
         C = max(len(case.mix.classes) for case in cases)
         n_max = max(c.n_max for case in cases for c in case.mix.classes)
@@ -247,27 +282,49 @@ class SchedSweep(ChunkedVmapSweep):
 
         cfg = self._stack_cfg(cases, C, hk_len, hn_len)
         G = len(cases)
-        inter = np.zeros((G, T_b), np.float32)
-        ids = np.zeros((G, T_b), np.int32)
-        exps = np.zeros((G, T_b, n_max), np.float32)
-        for i, case in enumerate(cases):
-            rng = np.random.default_rng(case.seed)
-            case_n_max = max(c.n_max for c in case.mix.classes)
-            it, ex, ci = case.mix.multiclass_device_arrays(rng, count, case_n_max)
-            inter[i, :count] = it
-            ids[i, :count] = ci
-            # Narrower classes leave trailing Exp columns at zero; the scan
-            # masks draws at j >= k, so the padding never enters.
-            exps[i, :count, :case_n_max] = ex
+        # Materialized runs keep the class-id streams for the per-class
+        # reductions; streamed runs fold them per chunk and never stack them.
+        ids_full = None if spec else np.zeros((G, count), np.int32)
+
+        def chunk_streams(idx):
+            inter = np.zeros((len(idx), T_b), np.float32)
+            ids = np.zeros((len(idx), T_b), np.int32)
+            exps = np.zeros((len(idx), T_b, n_max), np.float32)
+            for j, i in enumerate(idx):
+                if j and i == idx[0]:  # tail pad: repeat the chunk's row 0
+                    inter[j], ids[j], exps[j] = inter[0], ids[0], exps[0]
+                    continue
+                case = cases[i]
+                rng = np.random.default_rng(case.seed)
+                case_n_max = max(c.n_max for c in case.mix.classes)
+                it, ex, ci = case.mix.multiclass_device_arrays(
+                    rng, count, case_n_max)
+                inter[j, :count] = it
+                ids[j, :count] = ci
+                # Narrower classes leave trailing Exp columns at zero; the
+                # scan masks draws at j >= k, so the padding never enters.
+                exps[j, :count, :case_n_max] = ex
+                if ids_full is not None:
+                    ids_full[i] = ci
+            return inter, ids, exps
 
         fn = self._fn_for(key)
-        stacked = self._launch_chunks(fn, cfg, (inter, ids, exps), G, chunk, count)
-        stacked["cls_ids"] = jnp.asarray(ids[:, :count])
+        fold = (
+            multiclass_fold(int(count * spec.warmup_frac), C, count)
+            if spec else None
+        )
+        stacked = self._launch_chunks(fn, cfg, chunk_streams, G, chunk, count,
+                                      fold=fold)
+        if not spec:
+            stacked["cls_ids"] = jnp.asarray(ids_full)
         return SchedResult(
             cases=list(cases),
-            out=stacked,
+            out={} if spec else stacked,
             cfg=cfg,
             count=count,
             compiles=self.stats.traces - traces0,
             launches=self.stats.launches - launches0,
+            streamed=(
+                StreamedStats(spec.warmup_frac, count, stacked) if spec else None
+            ),
         )

@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.coding.codec import pow2_bucket
 from repro.core.traces import DevicePools
-from repro.fleet.sweep import ChunkedVmapSweep, SweepCase, SweepResult
+from repro.fleet.sweep import ChunkedVmapSweep, SweepCase, SweepResult, frontier_fold
 from repro.taskq.policies import encode_policy
 
 
@@ -64,8 +64,8 @@ class TaskqSweep(ChunkedVmapSweep):
     """
 
     def __init__(self, *, chunk: int = 64, t_floor: int | None = None,
-                 q_cap: int = 128):
-        super().__init__(chunk=chunk, t_floor=t_floor)
+                 q_cap: int = 128, mesh=None):
+        super().__init__(chunk=chunk, t_floor=t_floor, mesh=mesh)
         if q_cap < 1:
             raise ValueError("q_cap must be >= 1")
         self.q_cap = q_cap
@@ -76,13 +76,14 @@ class TaskqSweep(ChunkedVmapSweep):
                    hn_len: int, pool_shape: tuple):
         """The compilation-cache key a run with these shapes lands in."""
         return (
-            min(pow2_bucket(n_cases), self.chunk),
+            self._chunk_bucket(n_cases),
             pow2_bucket(count, self.t_floor),
             L,
             self.q_cap,
             hk_len,
             hn_len,
             tuple(pool_shape),
+            self.mesh_shape,
         )
 
     def _build(self, key: tuple):
@@ -133,15 +134,23 @@ class TaskqSweep(ChunkedVmapSweep):
         return cfg
 
     def run(self, cases: list[SweepCase], count: int,
-            pools: DevicePools) -> TaskqResult:
+            pools: DevicePools, *, stream=None) -> TaskqResult:
         """Evaluate every grid point exactly over ``count`` arrivals.
 
         Host side: per-case RNG streams (:func:`taskq_streams`) generate the
         workload gaps and pool-row draws. Device side: ceil(G / chunk)
-        vmapped launches sharing one device copy of ``pools``.
+        vmapped launches sharing one device copy of ``pools`` — on a mesh,
+        the pools replicate to every device while the grid axis shards.
+
+        ``stream`` (True or a :class:`repro.fleet.shard.StreamSpec`) folds
+        each chunk into the fleet frontier statistics on device instead of
+        stacking the exact (G, count) block — see :mod:`repro.fleet.shard`.
         """
         if not cases:
             raise ValueError("empty case grid")
+        from repro.fleet.shard import StreamedStats, resolve_stream
+
+        spec = resolve_stream(stream)
         Ls = {c.L for c in cases}
         if len(Ls) != 1:
             raise ValueError(f"all cases of one run must share L, got {sorted(Ls)}")
@@ -162,25 +171,38 @@ class TaskqSweep(ChunkedVmapSweep):
 
         cfg = self._stack_cfg(cases, hk_len, hn_len)
         G = len(cases)
-        inter = np.zeros((G, T_b), np.float32)
-        idx = np.zeros((G, T_b), np.int32)
-        for i, case in enumerate(cases):
-            it, ix = taskq_streams(case, count, pools.n_rows)
-            inter[i, :count] = it
-            idx[i, :count] = ix
+
+        def chunk_streams(rows):
+            inter = np.zeros((len(rows), T_b), np.float32)
+            idx = np.zeros((len(rows), T_b), np.int32)
+            for j, i in enumerate(rows):
+                if j and i == rows[0]:  # tail pad: repeat the chunk's row 0
+                    inter[j], idx[j] = inter[0], idx[0]
+                    continue
+                it, ix = taskq_streams(cases[i], count, pools.n_rows)
+                inter[j, :count] = it
+                idx[j, :count] = ix
+            return inter, idx
 
         fn = self._fn_for(key)
+        fold = (
+            frontier_fold(int(count * spec.warmup_frac), hn_len)
+            if spec else None
+        )
         stacked = self._launch_chunks(
-            fn, cfg, (inter, idx), G, chunk, count,
-            broadcast=(pools.pools, pools.sizes_mb),
+            fn, cfg, chunk_streams, G, chunk, count,
+            broadcast=(pools.pools, pools.sizes_mb), fold=fold,
         )
         return TaskqResult(
             cases=list(cases),
-            out=stacked,
+            out={} if spec else stacked,
             cfg=cfg,
             count=count,
             compiles=self.stats.traces - traces0,
             launches=self.stats.launches - launches0,
+            streamed=(
+                StreamedStats(spec.warmup_frac, count, stacked) if spec else None
+            ),
         )
 
 

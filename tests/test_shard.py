@@ -1,0 +1,270 @@
+"""repro.fleet.shard: streaming frontier reductions and shard_map scale-out.
+
+Single device: a streamed run (``run(..., stream=...)``) must be a
+bit-exact equal of the materialized reduce for all three engines — the
+fold runs the SAME jitted reduction kernels per chunk that the
+materialized path runs on the full block, and per-row reductions are
+leading-batch invariant. Multi-device (host-platform virtual devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``): mesh-sharded
+sweeps are bit-exact equals of unsharded ones on mixed-policy fleet,
+mixed-discipline sched, and threshold+greedy taskq grids, with compile
+counts pinned per mesh shape through ``stats.by_mesh``. Also pins the
+``masked_percentiles`` empty-mask/single-survivor contract (NaN, not
+clamped garbage) and its propagation through the frontier consumers.
+"""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PAPER_READ_3MB, PAPER_WRITE_3MB, RequestClass
+from repro.core.traces import TraceStore
+from repro.fleet import (
+    FleetSweep,
+    PolicySpec,
+    StreamSpec,
+    TenantMix,
+    convergence_stats,
+    frontier_points,
+    grid_cases,
+    resolve_grid_mesh,
+    write_fleet_artifact,
+)
+from repro.fleet.shard import resolve_stream
+from repro.fleet.stats import masked_percentiles
+from repro.sched import (
+    DisciplineSpec,
+    SchedSweep,
+    multiclass_points,
+    sched_cases,
+    write_multiclass_artifact,
+)
+from repro.taskq import TaskqSweep, write_taskq_artifact
+
+R3 = RequestClass("read3mb", 3.0, PAPER_READ_3MB, k_max=6, r_max=2.0, n_max=12)
+R1 = RequestClass("read1mb", 1.0, PAPER_READ_3MB, k_max=4, r_max=2.0, n_max=8)
+W1 = RequestClass("write1mb", 1.0, PAPER_WRITE_3MB, k_max=3, r_max=2.0, n_max=6)
+L = 16
+
+N_DEV = len(jax.devices())
+needs2 = pytest.mark.skipif(N_DEV < 2, reason="needs >=2 devices "
+                            "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+needs4 = pytest.mark.skipif(N_DEV < 4, reason="needs >=4 devices")
+
+
+def fleet_grid(n_lam: int = 4) -> list:
+    """Mixed-policy fleet grid: TOFEC adaptive + static + fixed-k points."""
+    lams = np.linspace(5.0, 60.0, n_lam)
+    pols = [PolicySpec.tofec(), PolicySpec.static(6, 3), PolicySpec.fixedk(4)]
+    return grid_cases(lams, pols, [0], R3, L)
+
+
+def sched_grid() -> list:
+    """Mixed-discipline joint grid over a 2-class tenant mix."""
+    mixes = [TenantMix(lam, (R3, R1), (0.6, 0.4)) for lam in (15.0, 35.0)]
+    discs = [DisciplineSpec.fifo(), DisciplineSpec.priority(0, 1),
+             DisciplineSpec.wfq(2.0, 1.0)]
+    return sched_cases(mixes, discs, [0], L=L)
+
+
+def taskq_grid() -> list:
+    """Threshold (tofec/static) + greedy exact-engine grid."""
+    lams = np.linspace(10.0, 50.0, 3)
+    pols = [PolicySpec.tofec(), PolicySpec.greedy()]
+    return grid_cases(lams, pols, [0], R3, L)
+
+
+@pytest.fixture(scope="module")
+def pools():
+    sizes = tuple(R3.file_mb / k for k in range(1, R3.k_max + 1))
+    store = TraceStore.generate(PAPER_READ_3MB, sizes, threads=R3.n_max,
+                                samples=1024, correlation=0.12, seed=3)
+    return store.device_pools(n_max=R3.n_max)
+
+
+def assert_points_equal(a, b):
+    """Bit-exact frontier/multiclass point equality, NaN-aware (json keeps
+    float repr and serializes NaN identically on both sides)."""
+    assert len(a) == len(b)
+    for pa, pb in zip(a, b):
+        assert json.dumps(pa.to_dict()) == json.dumps(pb.to_dict())
+
+
+# ---------------------------------------------------------------------------
+# masked_percentiles edge cases (empty mask, single survivor)
+# ---------------------------------------------------------------------------
+
+
+def test_masked_percentiles_empty_mask_is_nan():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(3, 50)).astype(np.float32))
+    qs = jnp.asarray([50.0, 90.0, 99.0])
+    mask = jnp.ones_like(x, dtype=bool).at[1].set(False)
+    pct = np.asarray(masked_percentiles(x, qs, mask))
+    assert np.all(np.isnan(pct[1]))  # empty row: no statistic, not a clamp
+    assert np.all(np.isfinite(pct[[0, 2]]))
+    # Fully-masked rows agree with plain percentiles (lower interpolation).
+    ref = np.percentile(np.asarray(x[0]), [50.0, 90.0, 99.0], method="lower")
+    np.testing.assert_array_equal(pct[0], ref.astype(np.float32))
+
+
+def test_masked_percentiles_single_survivor():
+    """One surviving sample IS every percentile of that row."""
+    x = jnp.asarray(np.arange(20, dtype=np.float32).reshape(1, 20) * 3.0)
+    mask = jnp.zeros_like(x, dtype=bool).at[0, 7].set(True)
+    pct = np.asarray(masked_percentiles(x, jnp.asarray([0.0, 50.0, 100.0]), mask))
+    np.testing.assert_array_equal(pct[0], np.full(3, 21.0, np.float32))
+
+
+def test_multiclass_points_propagate_empty_class_as_nan():
+    """A class with weight 0 never arrives: its stats are NaN rows (count 0),
+    and Jain/aggregate stats come from the populated classes only."""
+    mix = TenantMix(20.0, (R3, R1), (1.0, 0.0))
+    res = SchedSweep(chunk=4).run(sched_cases([mix], [DisciplineSpec.fifo()], [0]),
+                                  400)
+    (pt,) = multiclass_points(res)
+    empty = pt.cls("read1mb")
+    assert empty["count"] == 0
+    assert all(math.isnan(empty[f]) for f in
+               ("mean", "p50", "p90", "p95", "p99", "mean_queueing",
+                "mean_k", "mean_n"))
+    assert math.isfinite(pt.cls("read3mb")["mean"]) and pt.jain_delay == 1.0
+    # ...and the artifact writer serializes the NaN rows without crashing.
+    streamed = SchedSweep(chunk=4).run(
+        sched_cases([mix], [DisciplineSpec.fifo()], [0]), 400, stream=True)
+    assert_points_equal([pt], multiclass_points(streamed))
+
+
+# ---------------------------------------------------------------------------
+# Streaming: bit-exact vs the materialized reduce (single device)
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_streamed_bit_exact(tmp_path):
+    cases = fleet_grid()
+    mat = FleetSweep(chunk=8).run(cases, 700)
+    st = FleetSweep(chunk=8).run(cases, 700, stream=True)
+    assert st.out == {} and st.streamed is not None  # no (G, T) block kept
+    assert_points_equal(frontier_points(mat), frontier_points(st))
+    assert convergence_stats(mat) == convergence_stats(st)
+    a = write_fleet_artifact(str(tmp_path / "a.json"), mat)
+    b = write_fleet_artifact(str(tmp_path / "b.json"), st)
+    assert a["points"] == b["points"] and a["convergence"] == b["convergence"]
+
+
+def test_sched_streamed_bit_exact(tmp_path):
+    cases = sched_grid()
+    mat = SchedSweep(chunk=4).run(cases, 500)
+    st = SchedSweep(chunk=4).run(cases, 500, stream=True)
+    assert st.out == {}
+    assert_points_equal(multiclass_points(mat), multiclass_points(st))
+    a = write_multiclass_artifact(str(tmp_path / "a.json"), mat)
+    b = write_multiclass_artifact(str(tmp_path / "b.json"), st)
+    assert a["points"] == b["points"]
+
+
+def test_taskq_streamed_bit_exact(pools, tmp_path):
+    cases = taskq_grid()
+    mat = TaskqSweep(chunk=4).run(cases, 500, pools)
+    st = TaskqSweep(chunk=4).run(cases, 500, pools, stream=True)
+    assert st.out == {}
+    assert_points_equal(frontier_points(mat), frontier_points(st))
+    a = write_taskq_artifact(str(tmp_path / "a.json"), mat)
+    b = write_taskq_artifact(str(tmp_path / "b.json"), st)
+    assert a["points"] == b["points"]
+
+
+def test_stream_spec_fixes_warmup_at_launch():
+    """The fold bakes the warmup cut in at launch; asking the frontier for a
+    different cut afterwards must be a loud error, not a silent reuse."""
+    res = FleetSweep(chunk=8).run(fleet_grid(2), 600, stream=StreamSpec(0.05))
+    frontier_points(res, 0.05)  # matching cut: fine
+    with pytest.raises(ValueError, match="warmup"):
+        frontier_points(res, 0.20)
+    assert resolve_stream(True) == StreamSpec()
+    assert resolve_stream(None) is None and resolve_stream(False) is None
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded equivalence (host virtual devices)
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_grid_mesh_validates():
+    mesh = resolve_grid_mesh(1)
+    assert mesh.axis_names == ("grid",) and mesh.size == 1
+    with pytest.raises(ValueError):
+        resolve_grid_mesh(N_DEV + 1)
+    with pytest.raises(ValueError):
+        resolve_grid_mesh(0)
+
+
+@needs2
+@pytest.mark.parametrize("d", [2, pytest.param(4, marks=needs4)])
+def test_fleet_mesh_bit_exact(d):
+    """Sharded (d-device) sweep == unsharded, raw outputs bitwise; compile
+    counts pinned per mesh shape via ``stats.by_mesh``."""
+    cases = fleet_grid()
+    ref = FleetSweep(chunk=8).run(cases, 700)
+    sweep = FleetSweep(chunk=8, mesh=d)
+    res = sweep.run(cases, 700)
+    for name in ("total", "queueing", "service", "n", "k"):
+        np.testing.assert_array_equal(np.asarray(res.out[name]),
+                                      np.asarray(ref.out[name]))
+    assert sweep.stats.by_mesh == {(d,): 1}
+    # Same bucket, different grid size: no new trace on this mesh shape.
+    sweep.run(fleet_grid(2), 700)
+    assert sweep.stats.by_mesh == {(d,): 1}
+    # Sharded AND streamed: still bit-exact vs unsharded materialized.
+    st = sweep.run(cases, 700, stream=True)
+    assert_points_equal(frontier_points(ref), frontier_points(st))
+    assert convergence_stats(ref) == convergence_stats(st)
+
+
+@needs2
+def test_sched_mesh_bit_exact():
+    cases = sched_grid()
+    ref = SchedSweep(chunk=4).run(cases, 500)
+    sweep = SchedSweep(chunk=4, mesh=2)
+    res = sweep.run(cases, 500)
+    for name in ("total", "queueing", "service", "n", "k", "cls_ids"):
+        np.testing.assert_array_equal(np.asarray(res.out[name]),
+                                      np.asarray(ref.out[name]))
+    assert sweep.stats.by_mesh == {(2,): 1}
+    st = sweep.run(cases, 500, stream=True)
+    assert_points_equal(multiclass_points(ref), multiclass_points(st))
+
+
+@needs2
+def test_taskq_mesh_bit_exact(pools):
+    """Exact engine on a mesh: grid shards, the one trace-pool copy
+    broadcasts to every device (in_axes=None -> replicated spec)."""
+    cases = taskq_grid()
+    ref = TaskqSweep(chunk=8).run(cases, 500, pools)
+    sweep = TaskqSweep(chunk=8, mesh=2)
+    res = sweep.run(cases, 500, pools)
+    for name in ("total", "queueing", "service", "n", "k"):
+        np.testing.assert_array_equal(np.asarray(res.out[name]),
+                                      np.asarray(ref.out[name]))
+    assert sweep.stats.by_mesh == {(2,): 1}
+    st = sweep.run(cases, 500, pools, stream=True)
+    assert_points_equal(frontier_points(ref), frontier_points(st))
+
+
+@needs4
+def test_chunk_rounds_up_to_mesh_multiple():
+    """chunk=6 on a 4-device mesh pads to 8 so every shard gets equal rows;
+    results for the real rows are untouched by the padding."""
+    cases = fleet_grid()[:5]
+    sweep = FleetSweep(chunk=6, mesh=4)
+    key = sweep.bucket_key(len(cases), 700, R3.n_max, R3.k_max + 1, R3.n_max + 1)
+    assert key[0] % 4 == 0
+    res = sweep.run(cases, 700)
+    assert res.launches == 1
+    ref = FleetSweep(chunk=8).run(cases, 700)
+    np.testing.assert_array_equal(np.asarray(res.out["total"]),
+                                  np.asarray(ref.out["total"]))

@@ -323,9 +323,16 @@ class Codec:
 
     # -- batched API --------------------------------------------------------
 
-    def encode(self, data, n: int, k: int):
+    def encode(self, data, n: int, k: int, *, n_out: int | None = None):
         """Systematic encode: (batch, k, B) → (batch, n, B). Also accepts a
         single codeword (k, B) and returns (n, B).
+
+        ``n_out`` (k ≤ n_out ≤ n) produces only the FIRST n_out codeword rows
+        — the write path's partial encode for an adapted (smaller) code.
+        Cauchy parity rows depend on n − k, so this slices the full (n, k)
+        parity matrix rather than building an (n_out, k) code: the emitted
+        strips are bit-identical to a prefix of the full codeword and stay
+        compatible with every chunking level of the same layout.
 
         numpy inputs return host numpy; on the jitted backends jax inputs
         (traced or concrete) return jax arrays, so the codec composes with
@@ -339,13 +346,18 @@ class Codec:
             raise ValueError(f"data must be (batch, k={k}, B), got {data.shape}")
         if not 0 < k <= n:
             raise ValueError(f"need 0 < k <= n, got ({n=}, {k=})")
+        if n_out is None:
+            n_out = n
+        elif not k <= n_out <= n:
+            raise ValueError(f"need k <= n_out <= n, got ({n=}, {k=}, {n_out=})")
         batch, _, B = data.shape
         self.stats.calls += 1
         self.stats.items += batch
-        if n == k:
+        if n_out == k:
             out = data
         else:
-            par = rs.cauchy_parity_matrix(n, k)  # (n - k, k), cached host const
+            # Prefix of the cached full parity matrix (see n_out docstring).
+            par = rs.cauchy_parity_matrix(n, k)[: n_out - k]
             parity = self._matmul_bucketed("enc", par[None].repeat(batch, 0), data, n, k,
                                            use_jnp=use_jnp)
             if use_jnp:

@@ -105,25 +105,62 @@ class SharedKeyLayout:
         buf[: len(payload)] = np.frombuffer(payload, dtype=np.uint8)
         return buf.reshape(self.K, self.strip_bytes)
 
-    def encode_file(self, payload: bytes, codec: "codec_mod.Codec | None" = None) -> bytes:
-        """Pad payload to K*b, strip-encode, return the N*b coded object."""
+    def _n_strips(self, n: int | None, k: int | None) -> int:
+        """Strip count for an adapted chunk-level code (n, k); N if n is None.
+
+        The shared-key property makes the first n·m strips of the FULL (N, K)
+        codeword exactly an (n, k) chunk-level codeword, so an adapted write
+        is a strip-prefix — existing readers keep decoding at any level whose
+        chunks fall inside the written prefix.
+        """
+        if n is None:
+            return self.N
+        if k is None:
+            raise ValueError("adapted encode needs both n and k")
+        n_max, _, m = self.code_for_k(k)
+        if not k <= n <= n_max:
+            raise ValueError(f"invalid chunk code ({n},{k}) for {self}")
+        return n * m
+
+    def encode_file(
+        self,
+        payload: bytes,
+        codec: "codec_mod.Codec | None" = None,
+        *,
+        n: int | None = None,
+        k: int | None = None,
+    ) -> bytes:
+        """Pad payload to K*b, strip-encode, return the N*b coded object.
+
+        With an adapted chunk-level code (n, k) — the closed-loop write path
+        — returns the n·m·b-byte strip prefix instead (see :meth:`_n_strips`).
+        """
         codec = codec or codec_mod.get_codec()
-        coded = codec.encode(self._strip_data(payload), self.N, self.K)
+        n_strips = self._n_strips(n, k)
+        coded = codec.encode(self._strip_data(payload), self.N, self.K, n_out=n_strips)
         return np.asarray(coded).tobytes()
 
     def encode_files(
-        self, payloads: Sequence[bytes], codec: "codec_mod.Codec | None" = None
+        self,
+        payloads: Sequence[bytes],
+        codec: "codec_mod.Codec | None" = None,
+        *,
+        n: int | None = None,
+        k: int | None = None,
     ) -> list[bytes]:
         """Batch-encode many files of this class in one codec call.
 
         This is the proxy's admission-round amortization: one (batch, K, b)
-        → (batch, N, b) kernel launch instead of per-object launches.
+        → (batch, N, b) kernel launch instead of per-object launches. The
+        optional (n, k) is the adapted chunk-level code for queued writes
+        (same prefix semantics as :meth:`encode_file`).
         """
         if not payloads:
             return []
         codec = codec or codec_mod.get_codec()
+        n_strips = self._n_strips(n, k)
         data = np.stack([self._strip_data(p) for p in payloads])
-        coded = np.asarray(codec.encode(data, self.N, self.K))
+        coded = np.asarray(codec.encode(data, self.N, self.K, n_out=n_strips))
         return [coded[i].tobytes() for i in range(len(payloads))]
 
     def gather_rows(self, k: int, chunks: dict[int, bytes]) -> tuple[np.ndarray, list[int]]:

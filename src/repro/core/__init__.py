@@ -2,12 +2,17 @@
 threshold-based adaptive controller, queueing simulators)."""
 
 from repro.core.controller import (
+    FeedbackPolicy,
     FixedKAdaptivePolicy,
     GreedyPolicy,
+    MPCPolicy,
+    MPCTables,
     Policy,
     StaticPolicy,
     TofecTables,
     TOFECPolicy,
+    mpc_step_jax,
+    mpc_tables,
     tofec_step_jax,
     tofec_threshold_step,
 )
@@ -37,6 +42,11 @@ __all__ = [
     "TOFECPolicy",
     "GreedyPolicy",
     "FixedKAdaptivePolicy",
+    "FeedbackPolicy",
+    "MPCPolicy",
+    "MPCTables",
+    "mpc_step_jax",
+    "mpc_tables",
     "TofecTables",
     "tofec_step_jax",
     "tofec_threshold_step",

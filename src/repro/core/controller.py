@@ -80,10 +80,17 @@ class TOFECPolicy(Policy):
         return cls([build_class_plan(c, L, eq7_factor=eq7_factor) for c in classes], alpha)
 
     def reset(self) -> None:
-        self.q_ewma = 0.0
+        # None = cold start: the first observation seeds the EWMA directly
+        # (an EWMA initialized from 0 would bias early picks toward low q̄,
+        # hence toward under-chunked codes). Device scans use a -1.0 carry
+        # sentinel for the same rule — see tofec_threshold_step.
+        self.q_ewma = None
 
     def select(self, *, q: int, idle: int, cls_id: int = 0, now: float | None = None) -> tuple[int, int]:
-        self.q_ewma = self.alpha * q + (1.0 - self.alpha) * self.q_ewma
+        if self.q_ewma is None:
+            self.q_ewma = float(q)
+        else:
+            self.q_ewma = self.alpha * q + (1.0 - self.alpha) * self.q_ewma
         return self.plans[cls_id].pick_code(self.q_ewma)
 
 
@@ -160,10 +167,13 @@ class FixedKAdaptivePolicy(Policy):
         self.reset()
 
     def reset(self) -> None:
-        self.q_ewma = 0.0
+        self.q_ewma = None  # cold-start sentinel, see TOFECPolicy.reset
 
     def select(self, *, q: int, idle: int, cls_id: int = 0, now: float | None = None) -> tuple[int, int]:
-        self.q_ewma = self.alpha * q + (1.0 - self.alpha) * self.q_ewma
+        if self.q_ewma is None:
+            self.q_ewma = float(q)
+        else:
+            self.q_ewma = self.alpha * q + (1.0 - self.alpha) * self.q_ewma
         j = int(np.searchsorted(-self.h_n[1:], -self.q_ewma, side="left"))
         n = self.n_values[min(j, len(self.n_values) - 1)]
         return n, self.k
@@ -208,8 +218,12 @@ def tofec_threshold_step(
     ``vmap`` it across a stacked policy axis where ``r_max`` varies per grid
     point. Trailing zero entries in ``h_k``/``h_n`` are inert (0 > q̄ never
     holds for q̄ ≥ 0), which is what makes cross-class table padding safe.
+
+    ``q_ewma < 0`` is the cold-start sentinel (carries initialize to -1.0):
+    the first observation seeds the EWMA instead of averaging against a bogus
+    0, matching the host policies' ``q_ewma = None`` rule.
     """
-    q_new = alpha * q + (1.0 - alpha) * q_ewma
+    q_new = jnp.where(q_ewma < 0.0, q, alpha * q + (1.0 - alpha) * q_ewma)
     k = 1 + jnp.sum(h_k[1:] > q_new).astype(jnp.int32)
     n = 1 + jnp.sum(h_n[1:] > q_new).astype(jnp.int32)
     n = jnp.minimum((r_max * k).astype(jnp.int32), n)
@@ -241,6 +255,10 @@ class MPCPolicy(Policy):
     Falls back to max chunking until a rate estimate exists. Motivation and
     measured gains vs the threshold controller: EXPERIMENTS.md §Perf
     (controller hillclimb).
+
+    The whole select is vectorized float32 over the k-major code enumeration
+    (k ascending outer, n ascending inner) so it is the bit-level oracle for
+    :func:`mpc_step_jax`; see that function for the tie-break contract.
     """
 
     def __init__(
@@ -251,6 +269,7 @@ class MPCPolicy(Policy):
         alpha_rate: float = 0.05,
         util_cap: float = 0.9,
         q_guard: float = 4.0,
+        alpha_q: float = 0.1,
     ):
         from repro.core import queueing as _q
 
@@ -259,6 +278,7 @@ class MPCPolicy(Policy):
         self.alpha_rate = alpha_rate
         self.util_cap = util_cap
         self.q_guard = q_guard
+        self.alpha_q = alpha_q
         self.name = "mpc"
         p, J = cls_.params, cls_.file_mb
         self.codes = []
@@ -267,36 +287,181 @@ class MPCPolicy(Policy):
                 u = _q.usage(p, J, k, n / k)
                 ds = _q.service_delay_exact(p, J, k, n)
                 self.codes.append((n, k, u, ds))
+        self._n = np.asarray([c[0] for c in self.codes], np.int32)
+        self._k = np.asarray([c[1] for c in self.codes], np.int32)
+        self._u = np.asarray([c[2] for c in self.codes], np.float32)
+        self._ds = np.asarray([c[3] for c in self.codes], np.float32)
         self.reset()
 
     def reset(self) -> None:
         self.mean_ia = None
         self.last_arrival = None
-        self.q_ewma = 0.0
+        self.q_ewma = None  # cold-start sentinel, see TOFECPolicy.reset
 
     def select(self, *, q: int, idle: int, cls_id: int = 0, now: float | None = None) -> tuple[int, int]:
-        self.q_ewma = 0.1 * q + 0.9 * self.q_ewma
+        one = np.float32(1.0)
+        a_q = np.float32(self.alpha_q)
+        if self.q_ewma is None:
+            self.q_ewma = np.float32(q)
+        else:
+            self.q_ewma = a_q * np.float32(q) + (one - a_q) * np.float32(self.q_ewma)
         if now is not None:
             if self.last_arrival is not None:
-                ia = max(now - self.last_arrival, 1e-9)
+                ia = np.float32(max(now - self.last_arrival, 1e-9))
+                a_r = np.float32(self.alpha_rate)
                 self.mean_ia = (
                     ia if self.mean_ia is None
-                    else (1 - self.alpha_rate) * self.mean_ia + self.alpha_rate * ia
+                    else (one - a_r) * np.float32(self.mean_ia) + a_r * ia
                 )
             self.last_arrival = now
         if self.mean_ia is None:
-            best = max(self.codes, key=lambda c: (c[1], c[0]))
-            return best[0], best[1]
-        lam = 1.0 / self.mean_ia
-        best, best_cost = (1, 1), float("inf")
-        for n, k, u, ds in self.codes:
-            lam_bar = lam * u
-            if lam_bar >= self.util_cap * self.L:
-                continue
-            dq = lam_bar * u / (self.L * (self.L - lam_bar))
-            # backlog guard: sustained queue penalizes expensive codes.
-            dq *= 1.0 + self.q_ewma / self.q_guard
-            cost = dq + ds
-            if cost < best_cost:
-                best_cost, best = cost, (n, k)
-        return best
+            # Cold: max chunking = the LAST entry of the k-major enumeration
+            # (largest k, then largest n).
+            i = len(self.codes) - 1
+        else:
+            L = np.float32(self.L)
+            lam_bar = (one / np.float32(self.mean_ia)) * self._u
+            feasible = lam_bar < np.float32(self.util_cap) * L
+            with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+                dq = lam_bar * self._u / (L * (L - lam_bar))
+                # backlog guard: sustained queue penalizes expensive codes.
+                dq = dq * (one + np.float32(self.q_ewma) / np.float32(self.q_guard))
+                cost = np.where(feasible, dq + self._ds, np.float32(np.inf))
+            # First minimum = lowest k-major index; all-infeasible → index 0
+            # = (1, 1). Same rule as jnp.argmin in mpc_step_jax.
+            i = int(np.argmin(cost))
+        return int(self._n[i]), int(self._k[i])
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MPCTables:
+    """MPC cost model as device arrays (one class) — all fields runtime data.
+
+    The code enumeration is k-major (k ascending outer, n ascending inner),
+    identical to ``MPCPolicy.codes``; ``n``/``k``/``u``/``ds`` are parallel
+    (C,) arrays and the scalars ride along as 0-d arrays so swapping the
+    model never retraces.
+    """
+
+    n: jax.Array  # (C,) int32
+    k: jax.Array  # (C,) int32
+    u: jax.Array  # (C,) float32 thread-seconds per request
+    ds: jax.Array  # (C,) float32 exact service delay
+    L: jax.Array  # () float32 pool size
+    util_cap: jax.Array  # () float32
+    q_guard: jax.Array  # () float32
+    alpha_q: jax.Array  # () float32 backlog-EWMA gain (MPC default 0.1)
+    alpha_rate: jax.Array  # () float32 interarrival-EWMA gain
+
+    @classmethod
+    def from_policy(cls, pol: MPCPolicy) -> "MPCTables":
+        return cls(
+            n=jnp.asarray(pol._n),
+            k=jnp.asarray(pol._k),
+            u=jnp.asarray(pol._u),
+            ds=jnp.asarray(pol._ds),
+            L=jnp.float32(pol.L),
+            util_cap=jnp.float32(pol.util_cap),
+            q_guard=jnp.float32(pol.q_guard),
+            alpha_q=jnp.float32(pol.alpha_q),
+            alpha_rate=jnp.float32(pol.alpha_rate),
+        )
+
+    @classmethod
+    def trivial(cls) -> "MPCTables":
+        """Inert single-code table for steps that never select the MPC lane."""
+        return cls(
+            n=jnp.ones(1, jnp.int32),
+            k=jnp.ones(1, jnp.int32),
+            u=jnp.ones(1, jnp.float32),
+            ds=jnp.zeros(1, jnp.float32),
+            L=jnp.float32(1.0),
+            util_cap=jnp.float32(1.0),
+            q_guard=jnp.float32(1.0),
+            alpha_q=jnp.float32(0.1),
+            alpha_rate=jnp.float32(0.05),
+        )
+
+
+def mpc_tables(
+    cls_: RequestClass,
+    L: int,
+    *,
+    alpha_rate: float = 0.05,
+    util_cap: float = 0.9,
+    q_guard: float = 4.0,
+    alpha_q: float = 0.1,
+) -> MPCTables:
+    """Build :class:`MPCTables` through the host policy so the enumeration
+    and float32 casts are shared with the oracle by construction."""
+    pol = MPCPolicy(
+        cls_, L, alpha_rate=alpha_rate, util_cap=util_cap, q_guard=q_guard, alpha_q=alpha_q
+    )
+    return MPCTables.from_policy(pol)
+
+
+def mpc_step_jax(
+    carry: tuple[jax.Array, jax.Array, jax.Array],
+    q: jax.Array,
+    dt: jax.Array,
+    tables: MPCTables,
+) -> tuple[tuple[jax.Array, jax.Array, jax.Array], jax.Array, jax.Array]:
+    """One MPC arrival update, fully traceable: ((q̄', ia', has_rate'), n, k).
+
+    Carry = (q_ewma, mean_ia, has_rate), all float32 scalars; initialize to
+    (-1.0, 0.0, 0.0). ``q_ewma < 0`` is the cold-start sentinel (first
+    observation seeds the backlog EWMA); ``dt < 0`` means "no previous
+    arrival timestamp" — the rate EWMA only updates on ``dt ≥ 0``, mirroring
+    the host's ``now``/``last_arrival`` bookkeeping.
+
+    Tie-break contract (pinned by tests/test_fused_serve.py): costs are
+    evaluated over the k-major enumeration of :class:`MPCTables` and the
+    winner is the FIRST minimum — ``jnp.argmin`` here, ``np.argmin`` on the
+    host (which replaced the original strict-``<`` scalar loop precisely so
+    float cost ties resolve identically on both sides). Cold start
+    (has_rate == 0) picks index C-1, the max-(k, n) code; an all-infeasible
+    round degenerates to argmin over all-inf costs = index 0 = (1, 1).
+    """
+    q_ewma, mean_ia, has_rate = carry
+    q = jnp.float32(q)
+    dt = jnp.float32(dt)
+    t = tables
+    one = jnp.float32(1.0)
+    q_new = jnp.where(q_ewma < 0.0, q, t.alpha_q * q + (one - t.alpha_q) * q_ewma)
+    ia = jnp.maximum(dt, jnp.float32(1e-9))
+    seen = dt >= 0.0
+    ia_new = jnp.where(has_rate > 0.0, (one - t.alpha_rate) * mean_ia + t.alpha_rate * ia, ia)
+    mean_ia = jnp.where(seen, ia_new, mean_ia)
+    has_rate = jnp.where(seen, one, has_rate)
+    lam_bar = (one / jnp.maximum(mean_ia, jnp.float32(1e-30))) * t.u
+    feasible = lam_bar < t.util_cap * t.L
+    dq = lam_bar * t.u / (t.L * (t.L - lam_bar))
+    dq = dq * (one + q_new / t.q_guard)
+    cost = jnp.where(feasible, dq + t.ds, jnp.float32(jnp.inf))
+    idx = jnp.argmin(cost).astype(jnp.int32)
+    idx = jnp.where(has_rate > 0.0, idx, jnp.int32(t.n.shape[0] - 1))
+    return (q_new, mean_ia, has_rate), t.n[idx], t.k[idx]
+
+
+class FeedbackPolicy(Policy):
+    """Externally-driven write policy: closes the §III control loop.
+
+    The serving tower's fused controller picks (n, k) on device each round
+    and :meth:`push`\\ es it here; the proxy's write path then encodes every
+    queued write under the adapted code. ``select`` just replays the last
+    pushed code — no internal state beyond it.
+    """
+
+    def __init__(self, n: int, k: int):
+        self.name = "feedback"
+        self.push(n, k)
+
+    def push(self, n: int, k: int) -> None:
+        n, k = int(n), int(k)
+        if n < k or k < 1:
+            raise ValueError(f"invalid pushed code ({n},{k})")
+        self.code = (n, k)
+
+    def select(self, *, q: int, idle: int, cls_id: int = 0, now: float | None = None) -> tuple[int, int]:
+        return self.code

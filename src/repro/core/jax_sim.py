@@ -100,7 +100,9 @@ def tofec_scan_core(
         w = w + s
         return (w, q_ewma), (d_q + d_s, d_q, d_s, n_i, k_i)
 
-    init = (jnp.float32(0.0), jnp.float32(0.0))
+    # q̄ starts at the -1.0 cold-start sentinel (tofec_threshold_step):
+    # the first observed backlog seeds the EWMA instead of decaying from 0.
+    init = (jnp.float32(0.0), jnp.float32(-1.0))
     (_, _), (tot, dq, ds, ns, ks) = jax.lax.scan(step, init, (interarrivals, exp_draws))
     return {"total": tot, "queueing": dq, "service": ds, "n": ns, "k": ks}
 
@@ -147,12 +149,12 @@ def simulate_tofec_reference(
     ubar = np.float32(_usage(p, np.float32(1.0), np.float32(1.0)))
     j = np.arange(p.n_max, dtype=np.float32)
     w = np.float32(0.0)
-    q_ewma = np.float32(0.0)
+    q_ewma = np.float32(-1.0)  # cold-start sentinel, mirrors the scan carry
     tot, dq_l, ds_l, ns, ks = [], [], [], [], []
     for dt, e in zip(inter, exps):
         w = np.maximum(w - dt, np.float32(0.0))
         q = w * L / ubar
-        q_ewma = alpha * q + (one - alpha) * q_ewma
+        q_ewma = q if q_ewma < 0.0 else alpha * q + (one - alpha) * q_ewma
         k = 1 + int(np.sum(h_k[1:] > q_ewma))
         n = 1 + int(np.sum(h_n[1:] > q_ewma))
         n = max(min(int(np.float32(tables.r_max) * np.float32(k)), n), k)

@@ -316,6 +316,23 @@ def prefill(params, cfg: ModelConfig, batch, max_seq: int | None = None):
     return last, cache
 
 
+def prefill_tokens(params, cfg: ModelConfig, tokens, max_seq: int | None = None):
+    """Tokens-only prefill contract for the fused serving tower.
+
+    ``tokens`` is a plain (B, S) int32 array — traceable, so the serving
+    step can jit it together with the storage decode (no host batch-dict
+    construction between decode and prefill). Non-token modalities get zero
+    extras: the vlm family sees an all-zero patch grid (the serving tower
+    has no image side yet).
+    """
+    batch = {"tokens": tokens}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.zeros(
+            (tokens.shape[0], cfg.vision_patches, cfg.d_model), jnp.float32
+        )
+    return prefill(params, cfg, batch, max_seq)
+
+
 def cache_logical_axes(cfg: ModelConfig, B: int):
     """Logical axes matching init_cache's structure. B==1 (long-context)
     shards the cache sequence over 'model'; otherwise batch+kv-heads."""

@@ -54,6 +54,29 @@ class Arch:
     def init_cache(self, B, max_seq):
         return self.module.init_cache(self.cfg, B, max_seq)
 
+    def prefill_tokens(self, params, tokens, max_seq=None):
+        """Tokens-only prefill (fused-serving contract): (B, S) int32 in,
+        (logits, cache) out, fully traceable. Families whose module defines
+        ``prefill_tokens`` use it; otherwise the batch dict is built in-trace
+        with zero non-token extras (encdec frames, vlm patches)."""
+        fn = getattr(self.module, "prefill_tokens", None)
+        if fn is not None:
+            return fn(params, self.cfg, tokens, max_seq)
+        import jax.numpy as jnp
+
+        batch = {"tokens": tokens}
+        if self.cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (tokens.shape[0], self.cfg.vision_patches, self.cfg.d_model),
+                jnp.float32,
+            )
+        if self.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (tokens.shape[0], self.cfg.encoder_seq, self.cfg.d_model),
+                jnp.float32,
+            )
+        return self.module.prefill(params, self.cfg, batch, max_seq)
+
     def logical_axes(self):
         return self.module.logical_axes(self.cfg)
 

@@ -161,8 +161,9 @@ def multiclass_scan_core(
         work = work.at[cid].add(s)
         return (w, q_ewma, t_tot, work), (d_q + d_s, d_q, d_s, n_i, k_i)
 
+    # Per-class q̄ starts at the -1.0 cold-start sentinel (tofec_threshold_step).
     init = (
-        jnp.zeros(C, jnp.float32), jnp.zeros(C, jnp.float32),
+        jnp.zeros(C, jnp.float32), jnp.full(C, -1.0, jnp.float32),
         jnp.float32(0.0), jnp.zeros(C, jnp.float32),
     )
     _, (tot, dq, ds, ns, ks) = jax.lax.scan(

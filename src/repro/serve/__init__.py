@@ -1,1 +1,11 @@
-from repro.serve.engine import FusedServingStep, ServeResult, ServingEngine
+from repro.serve.engine import (
+    ClosedLoopResult,
+    ClosedLoopServer,
+    FusedServingStep,
+    ServePolicy,
+    ServeResult,
+    ServeTables,
+    ServingEngine,
+    serve_policy_step,
+    tokens_from_strips,
+)

@@ -6,18 +6,24 @@ backlog), tokenized prompts are batched, prefilled, and decoded with the
 arch's cached ``decode_step``. The storage path is the paper's system; the
 LM path is the substrate it feeds.
 
-Two fetch paths:
+Three fetch paths:
 
 * **unfused** — :meth:`ServingEngine.fetch_prompts` submits the whole round
   through :meth:`Proxy.read_many`; the proxy batch-decodes completions per
   admission round on the host codec.
 * **fused** — pass a :class:`FusedServingStep`: the proxy returns raw chunks
-  (``raw=True``) and ONE jitted launch then runs the TOFEC admission update
-  (:func:`repro.core.controller.tofec_step_jax`) *and* the batched MDS
-  decode for the whole round. Admission control and erasure coding share a
-  single compiled step — the serving-path half of the paper's proxy, on the
-  jnp / pallas codec backends (``REPRO_CODEC_BACKEND`` selects which; the
-  numpy backend is host-only and cannot fuse).
+  (``raw=True``) and ONE jitted launch then runs the admission update *and*
+  the batched MDS decode for the whole round. The controller is runtime data
+  (:class:`ServeTables`): TOFEC, static, fixed-k (threshold form, same
+  encodings as the :mod:`repro.fleet` sweeps) and MPC (traceable cost-model
+  argmin, :func:`repro.core.controller.mpc_step_jax`) all run through the
+  same trace — swapping the policy swaps arrays, never recompiles.
+* **closed loop** — :class:`ClosedLoopServer` extends the fused launch with
+  the LM prefill: one jitted step covers admission update → batched decode →
+  bytes→tokens → prefill, and the controller's (n, k) pick is pushed into
+  the proxy's write policy (:class:`repro.core.controller.FeedbackPolicy`)
+  so the next admission round's queued writes encode under the adapted code.
+  This is the paper's §III loop closed end to end.
 
 Compilation is shape-bucketed exactly like :mod:`repro.coding.codec`
 (powers of two on batch / parity rows / strip width), and the per-item
@@ -30,7 +36,9 @@ batch sizes reuses one trace per shape bucket (asserted in
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -39,44 +47,196 @@ import numpy as np
 from repro.coding import codec as codec_mod
 from repro.coding import rs
 from repro.coding.layout import SharedKeyLayout
-from repro.core.controller import TofecTables, tofec_step_jax
+from repro.core.controller import (
+    FeedbackPolicy,
+    MPCTables,
+    TofecTables,
+    mpc_step_jax,
+    mpc_tables,
+    tofec_threshold_step,
+)
+from repro.core.delay_model import RequestClass
 from repro.core.static_optimizer import build_class_plan
 from repro.models.registry import Arch
 from repro.storage.proxy import Proxy, store_coded_object
 
 
-class FusedServingStep:
-    """One jitted launch per serving round: TOFEC admission update + batched
-    MDS codec work (encode or decode), fused.
+#: ServeTables.pol ids: threshold-table controllers (tofec / static / fixedk)
+#: vs the MPC cost-model argmin.
+POL_THRESH = 0
+POL_MPC = 1
 
-    State: ``q_ewma`` (the controller's backlog EWMA) lives on device and is
-    threaded through successive calls, so the step is the serving-path twin
-    of one :func:`repro.core.jax_sim.simulate_tofec_scan` iteration. Each
-    call returns the payloads *and* the (n, k) the controller picks for the
-    next round.
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ServeTables:
+    """The serving controller as pure runtime data (one request class).
+
+    Every field is a device array, so the four policies (TOFEC / static /
+    fixed-k in threshold form + MPC) share ONE trace per shape bucket:
+    ``pol`` selects the lane inside the step and swapping policies swaps
+    array contents, never recompiles. Threshold encodings follow the
+    :mod:`repro.fleet` sweep convention (BIG sentinel, inert trailing
+    zeros); the MPC lane rides in :class:`repro.core.controller.MPCTables`.
+    """
+
+    pol: jax.Array  # () int32: POL_THRESH | POL_MPC
+    h_k: jax.Array  # (k_max + 1,) float32 thresholds (zeros on the MPC lane)
+    h_n: jax.Array  # (n_max + 1,) float32
+    r_max: jax.Array  # () float32
+    alpha: jax.Array  # () float32 backlog-EWMA memory (threshold lane)
+    mpc: MPCTables
+
+    @classmethod
+    def from_tofec(cls, tables: TofecTables, *, alpha: float = 0.99) -> "ServeTables":
+        return cls(
+            pol=jnp.int32(POL_THRESH),
+            h_k=jnp.asarray(tables.h_k, jnp.float32),
+            h_n=jnp.asarray(tables.h_n, jnp.float32),
+            r_max=jnp.float32(tables.r_max),
+            alpha=jnp.float32(alpha),
+            mpc=MPCTables.trivial(),
+        )
+
+
+def serve_policy_step(
+    carry: tuple[jax.Array, jax.Array, jax.Array],
+    q: jax.Array,
+    dt: jax.Array,
+    tables: ServeTables,
+) -> tuple[tuple[jax.Array, jax.Array, jax.Array], jax.Array, jax.Array]:
+    """One admission update with the policy as runtime data.
+
+    Carry = (q_ewma, mean_ia, has_rate) float32 scalars, initialized to
+    (-1.0, 0.0, 0.0): ``q_ewma < 0`` is the cold-start sentinel (the first
+    observation seeds the EWMA) and the rate pair only advances on
+    ``dt ≥ 0`` (see :func:`repro.core.controller.mpc_step_jax`). Both lanes
+    are evaluated and ``tables.pol`` selects — the price of one small argmin
+    buys policy swaps with zero recompiles.
+    """
+    q_ewma, mean_ia, has_rate = carry
+    q = jnp.float32(q)
+    dt = jnp.float32(dt)
+    q_thr, n_thr, k_thr = tofec_threshold_step(
+        q_ewma, q, tables.h_k, tables.h_n, tables.r_max, tables.alpha
+    )
+    (q_mpc, mean_ia, has_rate), n_mpc, k_mpc = mpc_step_jax(
+        (q_ewma, mean_ia, has_rate), q, dt, tables.mpc
+    )
+    is_mpc = tables.pol == POL_MPC
+    carry = (jnp.where(is_mpc, q_mpc, q_thr), mean_ia, has_rate)
+    n = jnp.where(is_mpc, n_mpc, n_thr)
+    k = jnp.where(is_mpc, k_mpc, k_thr)
+    return carry, n, k
+
+
+@dataclasses.dataclass(frozen=True)
+class ServePolicy:
+    """Declarative serving controller: tofec | static | fixedk | mpc.
+
+    :meth:`tables` resolves it to :class:`ServeTables` for one request
+    class; all four kinds produce identically-shaped tables for the same
+    class, so a live policy swap (``FusedServingStep.set_policy``) reuses
+    the existing trace.
+    """
+
+    kind: str
+    n: int = 0
+    k: int = 0
+    alpha: float = 0.99
+    eq7_factor: float = 2.0
+    alpha_rate: float = 0.05
+    util_cap: float = 0.9
+    q_guard: float = 4.0
+    alpha_q: float = 0.1
+
+    @classmethod
+    def tofec(cls, alpha: float = 0.99, eq7_factor: float = 2.0) -> "ServePolicy":
+        return cls("tofec", alpha=alpha, eq7_factor=eq7_factor)
+
+    @classmethod
+    def static(cls, n: int, k: int) -> "ServePolicy":
+        return cls("static", n=n, k=k)
+
+    @classmethod
+    def fixedk(cls, k: int, eq7_factor: float = 2.0) -> "ServePolicy":
+        return cls("fixedk", k=k, eq7_factor=eq7_factor)
+
+    @classmethod
+    def mpc(cls, *, alpha_rate: float = 0.05, util_cap: float = 0.9,
+            q_guard: float = 4.0, alpha_q: float = 0.1) -> "ServePolicy":
+        return cls("mpc", alpha_rate=alpha_rate, util_cap=util_cap,
+                   q_guard=q_guard, alpha_q=alpha_q)
+
+    def tables(self, request_class: RequestClass, L: int) -> ServeTables:
+        # The MPC lane is always populated (shape-stable swaps); threshold
+        # kinds just never select it.
+        mpc_t = mpc_tables(
+            request_class, L, alpha_rate=self.alpha_rate, util_cap=self.util_cap,
+            q_guard=self.q_guard, alpha_q=self.alpha_q,
+        )
+        if self.kind == "mpc":
+            h_k = np.zeros(request_class.k_max + 1, np.float32)
+            h_n = np.zeros(request_class.n_max + 1, np.float32)
+            r_max = request_class.r_max
+            pol = POL_MPC
+        else:
+            from repro.fleet.sweep import PolicySpec, policy_tables
+
+            spec = PolicySpec(self.kind, n=self.n, k=self.k, alpha=self.alpha,
+                              eq7_factor=self.eq7_factor)
+            h_k, h_n, r_max = policy_tables(spec, request_class, L)
+            pol = POL_THRESH
+        return ServeTables(
+            pol=jnp.int32(pol),
+            h_k=jnp.asarray(h_k, jnp.float32),
+            h_n=jnp.asarray(h_n, jnp.float32),
+            r_max=jnp.float32(r_max),
+            alpha=jnp.float32(self.alpha),
+            mpc=mpc_t,
+        )
+
+
+class FusedServingStep:
+    """One jitted launch per serving round: admission update + batched MDS
+    codec work (encode or decode), fused.
+
+    State: the controller carry (q̄ backlog EWMA + the MPC rate pair) lives
+    on device and is threaded through successive calls, so the step is the
+    serving-path twin of one :func:`repro.core.jax_sim.simulate_tofec_scan`
+    iteration. Each call returns the payloads *and* the (n, k) the
+    controller picks for the next round.
 
     Matrices are runtime inputs: decode matrices come from
     :meth:`Codec.decode_mats` (host-cached per erasure pattern), parity
     matrices from the cached Cauchy generator, both padded to the shape
-    bucket and run through ``backend.prep_mats`` — so changing the code or
-    the erasure pattern never retraces; only a new shape bucket compiles.
+    bucket and run through ``backend.prep_mats``; the controller itself is
+    runtime data too (:class:`ServeTables`) — so changing the code, the
+    erasure pattern or the *policy* never retraces; only a new shape bucket
+    compiles.
     """
 
-    def __init__(self, tables: TofecTables, *, codec: codec_mod.Codec | None = None,
-                 alpha: float = 0.99):
+    def __init__(self, tables: TofecTables | ServeTables, *,
+                 codec: codec_mod.Codec | None = None, alpha: float = 0.99):
         self.codec = codec or codec_mod.get_codec()
         if not self.codec.backend.jitted:
+            env = os.environ.get("REPRO_CODEC_BACKEND")
             raise ValueError(
-                f"codec backend {self.codec.name!r} is host-only; the fused "
-                "serving step needs the jnp or pallas backend (select via "
-                "REPRO_CODEC_BACKEND or get_codec('jnp'))"
+                f"codec backend {self.codec.name!r} is host-only: the fused "
+                "serving step runs admission + codec (+ prefill) in one "
+                "jitted launch and needs the jnp or pallas backend. Fix: set "
+                "REPRO_CODEC_BACKEND=jnp (or REPRO_CODEC_BACKEND=pallas) in "
+                "the environment, or pass codec=get_codec('jnp') explicitly "
+                f"(REPRO_CODEC_BACKEND is currently {env!r})."
             )
+        if isinstance(tables, TofecTables):
+            tables = ServeTables.from_tofec(tables, alpha=alpha)
         self.tables = tables
         self.alpha = alpha
         self.traces = 0  # outer-jit compilations (bounded by shape buckets)
         self._fns: dict[tuple, object] = {}
         self._lock = threading.Lock()
-        self.q_ewma = jnp.float32(0.0)
+        self.reset()
 
     @classmethod
     def for_class(cls, request_class, L: int, *, codec: codec_mod.Codec | None = None,
@@ -84,8 +244,22 @@ class FusedServingStep:
         plan = build_class_plan(request_class, L, eq7_factor=eq7_factor)
         return cls(TofecTables.from_plan(plan), codec=codec, alpha=alpha)
 
+    @classmethod
+    def for_policy(cls, policy: ServePolicy, request_class, L: int, *,
+                   codec: codec_mod.Codec | None = None) -> "FusedServingStep":
+        return cls(policy.tables(request_class, L), codec=codec, alpha=policy.alpha)
+
     def reset(self) -> None:
-        self.q_ewma = jnp.float32(0.0)
+        # (q_ewma, mean_ia, has_rate); -1.0 = cold-start sentinel.
+        self.carry = (jnp.float32(-1.0), jnp.float32(0.0), jnp.float32(0.0))
+
+    @property
+    def q_ewma(self) -> jax.Array:
+        return self.carry[0]
+
+    def set_policy(self, tables: ServeTables) -> None:
+        """Swap the controller live. Same table shapes → zero recompiles."""
+        self.tables = tables
 
     # -- compilation cache ---------------------------------------------------
 
@@ -95,29 +269,28 @@ class FusedServingStep:
         if fn is not None:
             return fn
         backend = self.codec.backend
-        tables, alpha = self.tables, self.alpha
         kind = key[0]
 
         if kind == "adm":  # admission update only (n == k: no parity work)
 
-            def fused(q_ewma, q):
+            def fused(tables, carry, q, dt):
                 self.traces += 1  # runs at trace time only
-                return tofec_step_jax(q_ewma, q, tables, alpha)
+                return serve_policy_step(carry, q, dt, tables)
 
         elif kind == "dec":
 
-            def fused(mats, rows, q_ewma, q):
+            def fused(tables, carry, mats, rows, q, dt):
                 self.traces += 1  # runs at trace time only
-                q_new, n_nxt, k_nxt = tofec_step_jax(q_ewma, q, tables, alpha)
-                return q_new, n_nxt, k_nxt, backend.matmul_traced(mats, rows)
+                carry, n_nxt, k_nxt = serve_policy_step(carry, q, dt, tables)
+                return carry, n_nxt, k_nxt, backend.matmul_traced(mats, rows)
 
         else:
 
-            def fused(mats, data, q_ewma, q):
+            def fused(tables, carry, mats, data, q, dt):
                 self.traces += 1  # runs at trace time only
-                q_new, n_nxt, k_nxt = tofec_step_jax(q_ewma, q, tables, alpha)
+                carry, n_nxt, k_nxt = serve_policy_step(carry, q, dt, tables)
                 parity = backend.matmul_traced(mats, data)
-                return q_new, n_nxt, k_nxt, jnp.concatenate([data, parity], axis=1)
+                return carry, n_nxt, k_nxt, jnp.concatenate([data, parity], axis=1)
 
         fn = jax.jit(fused)
         with self._lock:
@@ -126,13 +299,15 @@ class FusedServingStep:
 
     # -- fused entry points ----------------------------------------------------
 
-    def decode_batch(self, rows, present, *, n: int, k: int, q: float
-                     ) -> tuple[np.ndarray, tuple[int, int]]:
+    def decode_batch(self, rows, present, *, n: int, k: int, q: float,
+                     dt: float = -1.0) -> tuple[np.ndarray, tuple[int, int]]:
         """Admission update + batched reconstruct in ONE jitted launch.
 
         rows: (batch, k, B) surviving strips; present: (batch, k) strip ids
-        (or a shared (k,) pattern); q: the round's backlog signal. Returns
-        ((batch, k, B) decoded data, (n, k) for the next round).
+        (or a shared (k,) pattern); q: the round's backlog signal; dt: the
+        interarrival seconds feeding the MPC rate estimator (< 0 = unknown;
+        threshold policies ignore it). Returns ((batch, k, B) decoded data,
+        (n, k) for the next round).
         """
         rows = np.asarray(rows, np.uint8)
         single = rows.ndim == 2
@@ -145,15 +320,16 @@ class FusedServingStep:
         mats = self.codec.decode_mats(present, n, k)
         mats_p, rows_p, key = self.codec.pad_to_bucket("dec", mats, rows, n, k)
         fn = self._fn(key)
-        self.q_ewma, n_nxt, k_nxt, out = fn(
+        self.carry, n_nxt, k_nxt, out = fn(
+            self.tables, self.carry,
             jnp.asarray(self.codec.backend.prep_mats(mats_p)), jnp.asarray(rows_p),
-            self.q_ewma, jnp.float32(q),
+            jnp.float32(q), jnp.float32(dt),
         )
         data = np.asarray(out)[:batch, :k, :B]
         return (data[0] if single else data), (int(n_nxt), int(k_nxt))
 
-    def encode_batch(self, data, *, n: int, k: int, q: float
-                     ) -> tuple[np.ndarray, tuple[int, int]]:
+    def encode_batch(self, data, *, n: int, k: int, q: float,
+                     dt: float = -1.0) -> tuple[np.ndarray, tuple[int, int]]:
         """Admission update + batched systematic encode in ONE launch.
 
         data: (batch, k, B) → ((batch, n, B) coded strips, next (n, k)).
@@ -165,19 +341,34 @@ class FusedServingStep:
         batch, _, B = data.shape
         if n == k:  # no parity: admission update only, data passes through
             fn = self._fn(("adm",))
-            self.q_ewma, n_nxt, k_nxt = fn(self.q_ewma, jnp.float32(q))
+            self.carry, n_nxt, k_nxt = fn(self.tables, self.carry,
+                                          jnp.float32(q), jnp.float32(dt))
             return (data[0] if single else data), (int(n_nxt), int(k_nxt))
         m = n - k
         par = rs.cauchy_parity_matrix(n, k)
         mats = np.broadcast_to(par, (batch, m, k))
         mats_p, data_p, key = self.codec.pad_to_bucket("enc", mats, data, n, k)
         fn = self._fn(key)
-        self.q_ewma, n_nxt, k_nxt, out = fn(
+        self.carry, n_nxt, k_nxt, out = fn(
+            self.tables, self.carry,
             jnp.asarray(self.codec.backend.prep_mats(mats_p)), jnp.asarray(data_p),
-            self.q_ewma, jnp.float32(q),
+            jnp.float32(q), jnp.float32(dt),
         )
         coded = np.asarray(out)[:batch, :n, :B]
         return (coded[0] if single else coded), (int(n_nxt), int(k_nxt))
+
+
+def tokens_from_strips(data: jax.Array, k: int, strip_bytes: int,
+                       prompt_len: int) -> jax.Array:
+    """Traceable bytes→tokens: (batch, ≥k, ≥strip_bytes) decoded uint8 strips
+    → (batch, prompt_len) int32, little-endian 4-byte words.
+
+    The slice order matters: padding must come OFF before the flatten
+    (slicing after would interleave pad bytes into the token stream).
+    """
+    flat = data[:, :k, :strip_bytes].reshape(data.shape[0], k * strip_bytes)
+    by = flat[:, : prompt_len * 4].reshape(-1, prompt_len, 4).astype(jnp.int32)
+    return by[..., 0] | (by[..., 1] << 8) | (by[..., 2] << 16) | (by[..., 3] << 24)
 
 
 @dataclasses.dataclass
@@ -290,3 +481,144 @@ class ServingEngine:
         gen = self.generate(prompts, steps)
         return ServeResult(tokens=gen, storage_total_s=delays, codes=codes,
                            next_code=next_code)
+
+
+@dataclasses.dataclass
+class ClosedLoopResult:
+    tokens: np.ndarray  # (G, steps) generated ids, one row per SERVED key
+    ok: list[bool]  # per input key: did its read survive (per-item mask)
+    served_keys: list[str]  # keys in tokens' row order (the ok subset)
+    codes: list[tuple[int, int]]  # read (n, k) per served key
+    next_code: tuple[int, int]  # controller's pick, pushed to the write policy
+    storage_total_s: list[float]  # proxy read delays per served key
+
+
+class ClosedLoopServer:
+    """The paper's proxy as a CLOSED loop, one jitted step per round.
+
+    Each :meth:`serve_round`:
+
+    1. fetches the round's prompts through the proxy (``raw=True`` — chunks
+       only, per-item error masks; a partially-failed item drops out of the
+       round instead of wedging it),
+    2. runs ONE jitted launch: admission update (policy as runtime data,
+       :func:`serve_policy_step`) → batched MDS decode → bytes→tokens →
+       LM prefill — no per-round host round-trip between those stages,
+    3. finishes generation with the engine's cached ``decode_step``,
+    4. pushes the controller's (n, k) into the proxy's write policy
+       (:class:`repro.core.controller.FeedbackPolicy`), so writes queued for
+       the next admission round encode under the adapted code. (The pick is
+       read back after generation — which forces the launch anyway — so the
+       round never stalls on a mid-round device sync.)
+
+    Trace count is bounded per shape bucket: the cache key is the codec's
+    decode bucket extended with (prompt_len, strip_bytes) — the prefill's
+    static shape inputs. Batch varies within pow2 buckets; prefill/decode
+    run at the padded batch and outputs are sliced on host at the end.
+    """
+
+    def __init__(self, engine: ServingEngine, proxy: Proxy, layout: SharedKeyLayout,
+                 step: FusedServingStep, *, prompt_len: int,
+                 write_policy: FeedbackPolicy | None = None):
+        if prompt_len * 4 > layout.file_bytes:
+            raise ValueError(
+                f"prompt_len {prompt_len} needs {prompt_len * 4} bytes but the "
+                f"layout holds {layout.file_bytes}"
+            )
+        self.engine = engine
+        self.proxy = proxy
+        self.layout = layout
+        self.step = step
+        self.prompt_len = prompt_len
+        if write_policy is None and isinstance(proxy.write_policy, FeedbackPolicy):
+            write_policy = proxy.write_policy
+        self.write_policy = write_policy
+        self.traces = 0
+        self._fns: dict[tuple, object] = {}
+        self._lock = threading.Lock()
+        self._last_now: float | None = None
+
+    def put(self, key: str, payload: bytes, cls_id: int = 0):
+        """Queue a write through the proxy (encodes under the fed-back code
+        at the next admission round). Returns the async request handle."""
+        return self.proxy.write_async(key, self.layout, payload, cls_id)
+
+    def _fn(self, key: tuple):
+        with self._lock:
+            fn = self._fns.get(key)
+        if fn is not None:
+            return fn
+        backend = self.step.codec.backend
+        arch = self.engine.arch
+        max_seq = self.engine.max_seq
+        K, b, plen = self.layout.K, self.layout.strip_bytes, self.prompt_len
+        vocab = arch.cfg.vocab
+
+        def fused(tables, carry, mats, rows, q, dt, params):
+            self.traces += 1  # runs at trace time only
+            carry, n_nxt, k_nxt = serve_policy_step(carry, q, dt, tables)
+            data = backend.matmul_traced(mats, rows)
+            toks = tokens_from_strips(data, K, b, plen)
+            # Bucket-padding rows decode to zeros; clip keeps any stray bytes
+            # inside the embedding table instead of relying on gather clamping.
+            toks = jnp.clip(toks, 0, vocab - 1)
+            logits, cache = arch.prefill_tokens(params, toks, max_seq=max_seq)
+            return carry, n_nxt, k_nxt, toks, logits, cache
+
+        fn = jax.jit(fused)
+        with self._lock:
+            fn = self._fns.setdefault(key, fn)
+        return fn
+
+    def serve_round(self, keys: list[str], *, steps: int,
+                    q: float | None = None) -> ClosedLoopResult:
+        """One closed-loop serving round over ``keys``; see class docstring."""
+        payload_len = self.prompt_len * 4
+        results = self.proxy.read_many(keys, self.layout, payload_len, raw=True)
+        ok = [r.ok for r in results]
+        good = [r for r in results if r.ok]
+        if not good:
+            raise RuntimeError(
+                f"all {len(keys)} prompt fetches failed this round"
+            )
+        rows, present = self.layout.gather_rows_batch(
+            [(r.k, r.chunks) for r in good]
+        )
+        now = time.monotonic()
+        dt = -1.0 if self._last_now is None else max(now - self._last_now, 1e-9)
+        self._last_now = now
+        q_sig = float(len(keys)) if q is None else float(q)
+        codec = self.step.codec
+        n, k = self.layout.N, self.layout.K
+        mats = codec.decode_mats(np.asarray(present, np.int64), n, k)
+        mats_p, rows_p, bkey = codec.pad_to_bucket("dec", mats, rows, n, k)
+        fn = self._fn(("pfd", *bkey, self.prompt_len, self.layout.strip_bytes))
+        carry, n_nxt, k_nxt, _toks, logits, cache = fn(
+            self.step.tables, self.step.carry,
+            jnp.asarray(codec.backend.prep_mats(mats_p)), jnp.asarray(rows_p),
+            jnp.float32(q_sig), jnp.float32(dt), self.engine.params,
+        )
+        self.step.carry = carry
+        # Generation continues at the padded batch (same trace each round);
+        # rows are sliced back to the served subset on host at the end.
+        gen = []
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for _ in range(steps):
+            gen.append(np.asarray(tok)[:, 0])
+            logits, cache = self.engine._decode(self.engine.params, tok, cache)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tokens = np.stack(gen, axis=1)[: len(good)]
+        # Pull the controller's pick to host only now: generation already
+        # forced the launch, so this sync is free (reading it before the
+        # decode loop would stall the round on the fused launch).
+        next_code = (int(n_nxt), int(k_nxt))
+        if self.write_policy is not None:
+            self.write_policy.push(*next_code)  # close the write loop
+        return ClosedLoopResult(
+            tokens=tokens,
+            ok=ok,
+            served_keys=[r.key for r in good],
+            codes=[(r.n, r.k) for r in good],
+            next_code=next_code,
+            storage_total_s=[r.total_s for r in good],
+        )

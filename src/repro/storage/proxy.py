@@ -13,8 +13,15 @@ tasks are dropped; in-flight ones are abandoned — their results discarded —
 matching a proxy that closes the connection).
 
 Writes encode k chunks into n, upload each as a part, and complete when any
-k parts are durable (the paper's write model; remaining uploads become
-background tasks, footnote 1). All n parts target the same multipart object.
+k parts are durable (the paper's write model); the remaining uploads continue
+as background tasks (footnote 1), and once every issued task has resolved the
+proxy assembles the durable parts into the readable coded object and records
+which strips exist in its write registry — subsequent reads of that key only
+target chunks whose strips were actually written. The write path has its own
+policy hook (``write_policy``, e.g. :class:`repro.core.controller.FeedbackPolicy`
+fed by the fused serving controller), closing the §III control loop: each
+admission round encodes queued writes under the currently-adapted (n, k) via
+:meth:`SharedKeyLayout.encode_files`'s chunk-level code.
 
 Coding on BOTH directions of the hot path goes through the unified batched
 codec engine, amortized per admission round (the coding-overhead Ψ cap of
@@ -108,17 +115,27 @@ class _Request:
         self.cancelled = False
         self.result: RequestResult | None = None
         self.coded: bytes | None = None  # write path: batch-encoded object
+        self.n_issued = n  # tasks actually injected (registry may shrink it)
+        self.settled = threading.Event()  # write path: all issued tasks resolved
 
 
 class Proxy:
     """L-threaded proxy with TOFEC admission control."""
 
     def __init__(self, store: ObjectStore, policy: Policy, *, L: int = 16,
-                 codec: codec_mod.Codec | None = None):
+                 codec: codec_mod.Codec | None = None,
+                 write_policy: Policy | None = None):
         self.store = store
         self.policy = policy
+        #: optional separate policy for the write path (closed-loop feedback);
+        #: None = writes share the read policy.
+        self.write_policy = write_policy
         self.L = L
         self.codec = codec or codec_mod.get_codec()
+        #: key -> set of strip ids known durable (adapted writes store a strip
+        #: prefix; reads only target chunks whose strips are all present).
+        self._written: dict[str, set[int]] = {}
+        self._write_reqs: list[_Request] = []
         self._task_q: _queue.Queue = _queue.Queue()
         self._request_q: _queue.Queue = _queue.Queue()
         # Completed (non-raw) reads awaiting the admission round's ONE
@@ -177,11 +194,36 @@ class Proxy:
 
     def write(self, key: str, layout: SharedKeyLayout, payload: bytes,
               cls_id: int = 0, timeout: float = 60.0) -> RequestResult:
-        req = self._submit("write", key, layout, payload, len(payload), cls_id)
+        req = self.write_async(key, layout, payload, cls_id)
         req.done.wait(timeout)
         if req.result is None:
             raise TimeoutError(f"write {key} timed out")
         return req.result
+
+    def write_async(self, key: str, layout: SharedKeyLayout, payload: bytes,
+                    cls_id: int = 0) -> _Request:
+        """Submit a write without blocking; pair with :meth:`wait`.
+
+        The request completes (``done``) at k durable parts; the remaining
+        uploads run in background and ``settled`` fires once the assembled
+        object is readable (:meth:`flush_writes` waits for all of them).
+        """
+        return self._submit("write", key, layout, payload, len(payload), cls_id)
+
+    def flush_writes(self, timeout: float = 60.0) -> None:
+        """Drain the write path's background tasks (footnote 1).
+
+        Blocks until every submitted write's issued uploads have resolved and
+        the assembled coded object + its registry entry are visible to reads.
+        """
+        with self._state_lock:
+            reqs, self._write_reqs = self._write_reqs, []
+        deadline = time.monotonic() + timeout
+        for r in reqs:
+            if not r.settled.wait(max(deadline - time.monotonic(), 0.0)):
+                with self._state_lock:
+                    self._write_reqs.extend(rr for rr in reqs if not rr.settled.is_set())
+                raise TimeoutError(f"write {r.key} did not settle")
 
     def close(self):
         self._shutdown = True
@@ -195,12 +237,17 @@ class Proxy:
         with self._state_lock:
             q_len = self._request_q.qsize() + self._admit_backlog
             idle = self._idle
-        n, k = self.policy.select(q=q_len, idle=idle, cls_id=cls_id)
+        pol = self.write_policy if (op == "write" and self.write_policy is not None) \
+            else self.policy
+        n, k = pol.select(q=q_len, idle=idle, cls_id=cls_id, now=time.monotonic())
         # Clamp to what the layout supports: k | K, n ≤ N/m.
         k = max(kk for kk in layout.supported_k() if kk <= k)
         n_max, _, _ = layout.code_for_k(k)
         n = max(k, min(n, n_max))
         req = _Request(op, key, layout, payload, payload_len, n, k, cls_id, raw=raw)
+        if op == "write":
+            with self._state_lock:
+                self._write_reqs.append(req)
         self._request_q.put(req)
         return req
 
@@ -292,28 +339,50 @@ class Proxy:
                 self._finish(r, True, data=data)
 
     def _encode_pending_writes(self, pending: "deque[_Request]") -> None:
-        """One batched encode per (layout-class) group of queued writes."""
+        """One batched encode per (layout, n, k) group of queued writes.
+
+        Grouping by the adapted chunk-level code means each admission round's
+        writes encode under whatever (n, k) the (possibly feedback-driven)
+        write policy picked at submission — the closed-loop write path.
+        """
         todo = [r for r in pending if r.op == "write" and r.coded is None]
-        groups: dict[SharedKeyLayout, list[_Request]] = {}
+        groups: dict[tuple[SharedKeyLayout, int, int], list[_Request]] = {}
         for r in todo:
-            groups.setdefault(r.layout, []).append(r)
-        for lay, reqs in groups.items():
-            coded = lay.encode_files([r.payload for r in reqs], codec=self.codec)
+            groups.setdefault((r.layout, r.n, r.k), []).append(r)
+        for (lay, n, k), reqs in groups.items():
+            coded = lay.encode_files([r.payload for r in reqs], codec=self.codec,
+                                     n=n, k=k)
             for r, c in zip(reqs, coded):
                 r.coded = c
 
     def _inject(self, req: _Request):
         if req.op == "read":
-            n_max, _, _ = req.layout.code_for_k(req.k)
+            n_max, _, m = req.layout.code_for_k(req.k)
+            with self._state_lock:
+                avail = self._written.get(req.key)
+            if avail is None:
+                cand = list(range(n_max))  # pre-coded object: all chunks exist
+            else:
+                # Proxy-written key: only chunks whose strips are all durable.
+                cand = [ci for ci in range(n_max)
+                        if all(s in avail for s in range(ci * m, (ci + 1) * m))]
             # Prefer spread of chunk indices across the object (diversity).
-            order = list(np.random.default_rng(hash(req.key) & 0xFFFF).permutation(n_max))
-            for ci in order[: req.n]:
+            order = np.random.default_rng(hash(req.key) & 0xFFFF).permutation(len(cand))
+            issue = [cand[i] for i in order[: req.n]]
+            req.n_issued = len(issue)
+            if req.n_issued < req.k:
+                with req.lock:
+                    req.cancelled = True
+                    self._finish(req, False)
+                return
+            for ci in issue:
                 self._task_q.put((req, int(ci), None))
         else:
             coded = req.coded
             if coded is None:  # direct _inject callers outside the admit loop
-                coded = req.layout.encode_file(req.payload, codec=self.codec)
-            _, _, m = req.layout.code_for_k(req.k)
+                coded = req.layout.encode_file(req.payload, codec=self.codec,
+                                               n=req.n, k=req.k)
+            req.n_issued = req.n
             for ci in range(req.n):
                 off, ln = req.layout.chunk_range(req.k, ci)
                 self._task_q.put((req, int(ci), coded[off : off + ln]))
@@ -346,42 +415,89 @@ class Proxy:
             self._on_task_done(req, ci, data if ok else None, ok)
 
     def _on_task_done(self, req: _Request, ci: int, data, ok: bool):
+        assemble = False
         with req.lock:
-            if req.cancelled:
+            if req.op == "read":
+                if req.cancelled:
+                    return
+                if ok:
+                    req.completed[ci] = data
+                else:
+                    req.failures += 1
+                if len(req.completed) >= req.k:
+                    req.cancelled = True  # preemptive cancellation of the rest
+                    if not req.raw:
+                        # Hand off to the admit loop: the round's completions
+                        # reconstruct together in one batched decode.
+                        self._decode_q.put(req)
+                        self._request_q.put(_WAKE)
+                        if self._shutdown:
+                            # The admit loop may already have done its final
+                            # flush; decode inline so the waiter isn't stranded.
+                            self._flush_completed_reads()
+                    else:
+                        self._finish(req, True)
+                elif req.failures > req.n_issued - req.k:
+                    req.cancelled = True
+                    self._finish(req, False)
                 return
+            # write: never cancelled — uploads past the k-th durable part run
+            # as background tasks (footnote 1).
             if ok:
                 req.completed[ci] = data
             else:
                 req.failures += 1
-            if len(req.completed) >= req.k:
-                req.cancelled = True  # preemptive cancellation of the rest
-                if req.op == "read" and not req.raw:
-                    # Hand off to the admit loop: the round's completions
-                    # reconstruct together in one batched decode.
-                    self._decode_q.put(req)
-                    self._request_q.put(_WAKE)
-                    if self._shutdown:
-                        # The admit loop may already have done its final
-                        # flush; decode inline so the waiter isn't stranded.
-                        self._flush_completed_reads()
-                else:
+            if req.result is None:
+                if len(req.completed) >= req.k:
                     self._finish(req, True)
-            elif req.failures > req.n - req.k:
-                req.cancelled = True
-                self._finish(req, False)
+                elif req.failures > req.n_issued - req.k:
+                    self._finish(req, False)
+            if len(req.completed) + req.failures >= req.n_issued:
+                assemble = True
+        if assemble:
+            self._finalize_write(req)
+
+    def _finalize_write(self, req: _Request) -> None:
+        """All issued uploads resolved: assemble the durable parts into the
+        readable coded object and record its strips in the write registry.
+
+        Failed chunks leave zero-filled holes; the registry keeps reads off
+        them. Runs on the worker that resolved the last task (background —
+        off the request's completion path).
+        """
+        try:
+            _, _, m = req.layout.code_for_k(req.k)
+            b = req.layout.strip_bytes
+            if req.completed:
+                obj = bytearray(req.n_issued * m * b)
+                strips: set[int] = set()
+                for ci, blob in req.completed.items():
+                    off, ln = req.layout.chunk_range(req.k, ci)
+                    obj[off:off + ln] = blob
+                    strips.update(range(ci * m, (ci + 1) * m))
+                try:
+                    self.store.put(req.key, bytes(obj))
+                    with self._state_lock:
+                        self._written[req.key] = strips
+                except StorageError:
+                    _log.warning("write finalize failed for %r", req.key)
+        finally:
+            req.settled.set()
 
     def _finish(self, req: _Request, ok: bool, data: bytes | None = None):
         chunks = None
-        if ok and req.op == "read":
-            if req.raw:
-                chunks = dict(req.completed)
-            elif data is None:  # direct callers bypassing the admit loop
-                data = req.layout.reconstruct(req.k, req.completed, req.payload_len,
-                                              codec=self.codec)
-        elif ok and req.op == "write":
-            # k parts durable → request complete (footnote 1: the rest could
-            # continue in background; here they are cancelled).
-            pass
+        if req.op == "read" and req.raw:
+            # Raw reads surface whatever chunks arrived even on failure: a
+            # partially-failed batch item carries its own per-item error mask
+            # (ok=False) + partial data instead of wedging the whole batch.
+            chunks = dict(req.completed)
+        elif ok and req.op == "read" and data is None:
+            # direct callers bypassing the admit loop
+            data = req.layout.reconstruct(req.k, req.completed, req.payload_len,
+                                          codec=self.codec)
+        # writes: k parts durable → request complete; the remaining uploads
+        # keep running in background (footnote 1) and _finalize_write
+        # assembles the readable object once they all resolve.
         req.result = RequestResult(
             key=req.key,
             op=req.op,

@@ -164,7 +164,7 @@ def taskq_scan_core(
         jnp.zeros(L, jnp.float32),
         jnp.full(q_cap, -_INF),
         jnp.int32(0),
-        jnp.float32(0.0),
+        jnp.float32(-1.0),  # q̄ cold-start sentinel (tofec_threshold_step)
     )
     _, (tot, dq, ds, ns, ks) = jax.lax.scan(
         step, init, (interarrivals, pool_idx)

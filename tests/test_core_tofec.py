@@ -207,7 +207,9 @@ def test_jax_controller_matches_numpy():
     pol = TOFECPolicy([plan], alpha=0.7)
     import jax.numpy as jnp
 
-    q_ewma = jnp.float32(0.0)
+    # -1.0 = the device cold-start sentinel: like the freshly-reset host
+    # policy, the first observed q seeds the EWMA rather than decaying from 0.
+    q_ewma = jnp.float32(-1.0)
     pol.reset()
     rng = np.random.default_rng(5)
     for q in rng.integers(0, 40, size=60):

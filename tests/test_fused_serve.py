@@ -10,9 +10,27 @@ import jax
 from repro.coding import rs
 from repro.coding.codec import Codec, pow2_bucket
 from repro.coding.layout import SharedKeyLayout
-from repro.core import PAPER_READ_3MB, RequestClass, StaticPolicy, TOFECPolicy
+import jax.numpy as jnp
+
+from repro.core import (
+    PAPER_READ_3MB,
+    PAPER_WRITE_3MB,
+    FeedbackPolicy,
+    FixedKAdaptivePolicy,
+    MPCPolicy,
+    MPCTables,
+    RequestClass,
+    StaticPolicy,
+    TOFECPolicy,
+    mpc_step_jax,
+)
 from repro.models import get
-from repro.serve import FusedServingStep, ServingEngine
+from repro.serve import (
+    ClosedLoopServer,
+    FusedServingStep,
+    ServePolicy,
+    ServingEngine,
+)
 from repro.storage import MemoryStore, Proxy
 
 CLS = RequestClass("read3mb", 3.0, PAPER_READ_3MB, k_max=6, r_max=2.0, n_max=12)
@@ -145,5 +163,133 @@ def test_engine_fused_fetch_matches_unfused_end_to_end():
         direct = eng.generate(np.stack(truth), steps=4)
         np.testing.assert_array_equal(fres.tokens, direct)
         assert all(c == (4, 2) for c in fres.codes)
+    finally:
+        proxy.close()
+
+
+def test_fused_step_error_names_env_var(monkeypatch):
+    """The numpy-backend error fires at CONSTRUCTION (not trace time) and
+    tells the user exactly which knob to turn."""
+    monkeypatch.setenv("REPRO_CODEC_BACKEND", "numpy")
+    with pytest.raises(ValueError, match="REPRO_CODEC_BACKEND=jnp") as ei:
+        FusedServingStep.for_class(CLS, L, codec=Codec("numpy"))
+    assert "'numpy'" in str(ei.value)  # names the current setting
+
+
+MPC_GRID = [
+    # (cls, L, lam, seed) — ≥4 pinned points spanning pool sizes, classes,
+    # and light/heavy arrival rates (cold→warm rate estimator transitions).
+    (RequestClass("r3", 3.0, PAPER_READ_3MB, k_max=6, r_max=2.0, n_max=12), 16, 2.0, 0),
+    (RequestClass("r3", 3.0, PAPER_READ_3MB, k_max=6, r_max=2.0, n_max=12), 16, 30.0, 1),
+    (RequestClass("w3", 3.0, PAPER_WRITE_3MB, k_max=4, r_max=3.0, n_max=12), 8, 5.0, 2),
+    (RequestClass("r1", 1.0, PAPER_READ_3MB, k_max=3, r_max=2.0, n_max=6), 4, 60.0, 3),
+]
+
+
+@pytest.mark.parametrize("cls_,pool,lam,seed", MPC_GRID)
+def test_mpc_host_device_parity_draw_for_draw(cls_, pool, lam, seed):
+    """On-device MPC (mpc_step_jax) matches the host MPCPolicy decision
+    sequence draw-for-draw: same EWMA carries, same k-major first-minimum
+    argmin tie-breaking (see the mpc_step_jax docstring for the contract).
+
+    Host timestamps are float64 sums of float32 interarrivals, so the host's
+    ``now - last`` reproduces the exact float32 dt the device sees.
+    """
+    pol = MPCPolicy(cls_, pool)
+    tables = MPCTables.from_policy(pol)
+    rng = np.random.default_rng(seed)
+    dts = rng.exponential(1.0 / lam, 120).astype(np.float32)
+    qs = rng.integers(0, 50, 120)
+    carry = (jnp.float32(-1.0), jnp.float32(0.0), jnp.float32(0.0))
+    now = 0.0
+    for i, (dt, q) in enumerate(zip(dts, qs)):
+        if i > 0:
+            now += float(dt)
+        host = pol.select(q=int(q), idle=0, now=now)
+        carry, n, k = mpc_step_jax(
+            carry, jnp.float32(q), jnp.float32(dt if i > 0 else -1.0), tables
+        )
+        assert (int(n), int(k)) == host, f"diverged at arrival {i}"
+    # the carries themselves stayed bit-identical, not just the decisions
+    assert float(carry[0]) == float(pol.q_ewma)
+    assert float(carry[1]) == float(pol.mean_ia)
+
+
+def test_serve_policy_swap_shares_one_trace():
+    """MPC, TOFEC, static and fixed-k run through the SAME fused launch:
+    policies are runtime data (ServeTables), so swapping them mid-stream
+    never recompiles — and each lane still matches its host policy."""
+    policies = {
+        "tofec": (ServePolicy.tofec(), TOFECPolicy.for_classes([CLS], L)),
+        "static": (ServePolicy.static(8, 4), StaticPolicy(8, 4)),
+        "fixedk": (ServePolicy.fixedk(4), FixedKAdaptivePolicy(CLS, L, 4)),
+        "mpc": (ServePolicy.mpc(), MPCPolicy(CLS, L)),
+    }
+    step = FusedServingStep.for_policy(policies["tofec"][0], CLS, L,
+                                       codec=Codec("jnp"))
+    rng = np.random.default_rng(5)
+    n, k = 12, 6
+    data = rng.integers(0, 256, size=(2, k, 64), dtype=np.uint8)
+    _, present, rows = _erased(rng, data, n, k)
+    for name, (spec, host_pol) in policies.items():
+        step.set_policy(spec.tables(CLS, L))
+        step.reset()
+        host_pol.reset()
+        now = 0.0
+        for i, q in enumerate([0, 7, 25, 3]):
+            now += 0.05
+            got, nxt = step.decode_batch(rows, present, n=n, k=k, q=q,
+                                         dt=(0.05 if i > 0 else -1.0))
+            np.testing.assert_array_equal(got, data)
+            want = host_pol.select(q=q, idle=0, now=now)
+            # fixed-k host may propose n beyond this layout; the fused step
+            # reports the controller's raw pick, same as the host policy.
+            assert nxt == want, (name, i)
+    assert step.traces == 1, f"policy swap retraced: {step.traces} compiles"
+
+
+def test_closed_loop_round_is_one_launch_and_feeds_writes():
+    """Tentpole acceptance: ONE jitted step per round covers admission →
+    batched decode → bytes→tokens → prefill (trace count bounded per shape
+    bucket), generated tokens match the unfused engine, and the controller's
+    pick lands in the proxy's write policy each round."""
+    arch = get("qwen1.5-0.5b", smoke=True)
+    params = arch.init(jax.random.key(2))
+    eng = ServingEngine(arch, params, max_seq=64)
+
+    prompt_len = 16
+    layout = SharedKeyLayout(K=4, r=2, strip_bytes=prompt_len)
+    store = MemoryStore()
+    rng = np.random.default_rng(6)
+    keys, truth = [], []
+    for i in range(4):
+        toks = rng.integers(0, arch.cfg.vocab, size=(prompt_len,)).astype(np.int32)
+        ServingEngine.store_prompt(store, f"p/{i}", layout, toks)
+        keys.append(f"p/{i}")
+        truth.append(toks)
+
+    write_pol = FeedbackPolicy(layout.N, layout.K)
+    proxy = Proxy(store, StaticPolicy(8, 4), L=8, write_policy=write_pol)
+    step = FusedServingStep.for_policy(ServePolicy.tofec(), CLS, L,
+                                       codec=Codec("jnp"))
+    server = ClosedLoopServer(eng, proxy, layout, step, prompt_len=prompt_len)
+    try:
+        results = [server.serve_round(keys, steps=3) for _ in range(4)]
+        # one shape bucket (fixed batch/layout) → exactly one fused compile
+        assert server.traces == 1, f"{server.traces} compiles for 4 rounds"
+        for res in results:
+            assert res.ok == [True] * 4
+            assert res.next_code == write_pol.code  # loop is closed
+        # same tokens as prefill+decode on the ground-truth prompts
+        direct = eng.generate(np.stack(truth), steps=3)
+        np.testing.assert_array_equal(results[-1].tokens, direct)
+        # and the fed-back code governs the next queued write end-to-end
+        payload = rng.integers(0, 256, layout.file_bytes, dtype=np.uint8).tobytes()
+        server.put("w/0", payload)
+        proxy.flush_writes()
+        wres = [r for r in proxy.results if r.op == "write"]
+        assert wres and (wres[-1].n, wres[-1].k) == write_pol.code
+        back = proxy.read("w/0", layout, payload_len=len(payload))
+        assert back.ok and back.data == payload
     finally:
         proxy.close()

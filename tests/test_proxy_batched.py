@@ -6,8 +6,20 @@ import threading
 import numpy as np
 
 from repro.coding.layout import SharedKeyLayout
-from repro.core import PAPER_READ_3MB, RequestClass, StaticPolicy, TOFECPolicy
-from repro.storage import FaultyStore, MemoryStore, Proxy, store_coded_object
+from repro.core import (
+    PAPER_READ_3MB,
+    FeedbackPolicy,
+    RequestClass,
+    StaticPolicy,
+    TOFECPolicy,
+)
+from repro.storage import (
+    FaultyStore,
+    MemoryStore,
+    Proxy,
+    StorageError,
+    store_coded_object,
+)
 
 LAYOUT = SharedKeyLayout(K=6, r=2, strip_bytes=128)
 
@@ -141,5 +153,78 @@ def test_backlog_pressure_shifts_code_toward_fewer_chunks():
         # while the gate is closed (modulo the one-in-flight admission slot).
         assert all(b <= a + 1 for a, b in zip(ks, ks[1:]))
         assert {1, 6} <= set(ks)
+    finally:
+        proxy.close()
+
+
+class _OffsetFailStore(MemoryStore):
+    """Fails ranged reads for one key past a byte offset — a deterministic
+    'this object lost most of its strips' fault."""
+
+    def __init__(self, bad_key, max_offset):
+        super().__init__()
+        self.bad_key = bad_key
+        self.max_offset = max_offset
+
+    def get_range(self, key, offset, length):
+        if key == self.bad_key and offset >= self.max_offset:
+            raise StorageError(f"simulated loss: {key}@{offset}")
+        return super().get_range(key, offset, length)
+
+
+def test_raw_batch_surfaces_per_item_error_mask():
+    """A partially-failed item in a raw batch reports ok=False with its
+    surviving chunks, while the rest of the batch completes normally —
+    per-item error mask, not an all-or-nothing batch failure."""
+    rng = np.random.default_rng(7)
+    payloads = _payloads(rng, 4, LAYOUT.file_bytes)
+    # chunks 0-3 of the k=6 level survive; 4-11 are gone → < k readable
+    store = _OffsetFailStore("part/1", 4 * LAYOUT.strip_bytes)
+    keys = []
+    for i, p in enumerate(payloads):
+        store_coded_object(store, f"part/{i}", LAYOUT, p)
+        keys.append(f"part/{i}")
+    proxy = Proxy(store, StaticPolicy(12, 6), L=8)
+    try:
+        results = proxy.read_many(keys, LAYOUT, payload_len=LAYOUT.file_bytes,
+                                  raw=True)
+        assert [r.ok for r in results] == [True, False, True, True]
+        bad = results[1]
+        assert bad.chunks is not None and 0 < len(bad.chunks) < bad.k
+        for ci, blob in bad.chunks.items():  # what arrived is still intact
+            off, ln = LAYOUT.chunk_range(bad.k, ci)
+            assert blob == payloads[1][0:0] + store.get("part/1")[off:off + ln]
+        for r, p in zip(results, payloads):
+            if r.ok:
+                got = LAYOUT.reconstruct(r.k, r.chunks, payload_len=len(p))
+                assert got == p
+    finally:
+        proxy.close()
+
+
+def test_closed_write_path_recodes_after_midrun_switch():
+    """Tentpole round-trip: the controller's fed-back (n, k) governs how the
+    NEXT queued write is encoded, while objects written under the old code
+    stay readable. Exercises write → flush → registry-guided read."""
+    rng = np.random.default_rng(8)
+    store = MemoryStore()
+    wp = FeedbackPolicy(12, 6)
+    proxy = Proxy(store, StaticPolicy(12, 6), L=8, write_policy=wp)
+    pa = _payloads(rng, 1, LAYOUT.file_bytes)[0]
+    pb = _payloads(rng, 1, LAYOUT.file_bytes)[0]
+    try:
+        ra = proxy.write("w/a", LAYOUT, pa)
+        assert ra.ok and (ra.n, ra.k) == (12, 6)
+        wp.push(2, 2)  # controller adapts: heavy load → fewer, larger chunks
+        rb = proxy.write("w/b", LAYOUT, pb)
+        assert rb.ok and (rb.n, rb.k) == (2, 2)
+        proxy.flush_writes()
+        # the two stored objects really are different codes of the shared
+        # strip space: full (12,6) codeword vs the 2-chunk (k=2, m=3) prefix
+        assert len(store.get("w/a")) == 12 * LAYOUT.strip_bytes
+        assert len(store.get("w/b")) == 2 * 3 * LAYOUT.strip_bytes
+        for key, p in [("w/a", pa), ("w/b", pb)]:
+            res = proxy.read(key, LAYOUT, payload_len=len(p))
+            assert res.ok and res.data == p
     finally:
         proxy.close()

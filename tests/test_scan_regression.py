@@ -88,3 +88,33 @@ def test_scan_adaptation_tracks_event_sim(lam, k_lo, k_hi):
     assert k_lo <= scan_k <= k_hi, (scan_k, event_k)
     assert k_lo <= event_k <= k_hi, (scan_k, event_k)
     assert abs(scan_k - event_k) < 1.2
+
+
+def test_ewma_warmup_seeds_from_first_observation():
+    """Cold-start pin (EWMA bias bugfix): the first admission round's backlog
+    observation SEEDS q̄ — it is not averaged against a bogus 0 — identically
+    on the host policy and the device step (-1.0 carry sentinel).
+
+    The q̄ trajectory below starts at exactly 30.0 (the first observation);
+    the pre-fix behavior started at alpha*30 = 15.0 and biased every early
+    (n, k) pick low. Update these pins only with a deliberate semantic
+    change to the controller.
+    """
+    from repro.core import tofec_step_jax
+
+    qs = [30, 30, 5, 0, 0, 0]
+    pol = TOFECPolicy([PLAN], alpha=0.5)
+    host_codes, host_qbar = [], []
+    for q in qs:
+        host_codes.append(pol.select(q=q, idle=0))
+        host_qbar.append(float(pol.q_ewma))
+    q_ewma = jnp.float32(-1.0)  # device cold-start sentinel
+    dev_codes, dev_qbar = [], []
+    for q in qs:
+        q_ewma, n, k = tofec_step_jax(q_ewma, jnp.float32(q), TABLES, 0.5)
+        dev_codes.append((int(n), int(k)))
+        dev_qbar.append(float(q_ewma))
+    assert host_codes == dev_codes == [(1, 1), (1, 1), (1, 1), (1, 1), (2, 1), (3, 2)]
+    np.testing.assert_allclose(
+        host_qbar, [30.0, 30.0, 17.5, 8.75, 4.375, 2.1875], rtol=1e-6)
+    np.testing.assert_allclose(dev_qbar, host_qbar, rtol=1e-6)

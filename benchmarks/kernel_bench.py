@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import BenchTimer
+from repro import obs as _obs
 from repro.coding import rs
 from repro.coding.codec import Codec
 from repro.core import PAPER_READ_3MB, RequestClass, TOFECPolicy
@@ -259,6 +260,7 @@ def bench_serve_closed_loop(batches: tuple = (8, 32), rounds: int = 8,
     _os.makedirs(RESULTS_DIR, exist_ok=True)
     artifact = {
         "schema": "repro.serve/BENCH_serve/v1",
+        "meta": _obs.run_meta(),
         "rounds": rounds, "steps": steps, "prompt_len": prompt_len,
         "layout": {"K": layout.K, "N": layout.N,
                    "strip_bytes": layout.strip_bytes},
@@ -581,6 +583,7 @@ def bench_shard_scaling(count: int = 1024, grid: int = 1024,
     _os.makedirs(RESULTS_DIR, exist_ok=True)
     artifact = {
         "schema": "repro.fleet/BENCH_shard/v1",
+        "meta": _obs.run_meta(mesh_shape=(d_big,)),
         "grid": grid, "count": count,
         "big_grid": big_grid, "big_count": big_count,
         "host_devices": n_dev, "host_cores": cores,

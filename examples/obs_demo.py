@@ -1,0 +1,122 @@
+"""Telemetry demo: the three repro.obs layers over one serving round and
+one exact task-level sweep.
+
+Turns collection on (:func:`repro.obs.set_enabled` — the programmatic twin
+of ``REPRO_OBS=1``), runs a small closed-loop serve and a TaskqSweep grid,
+then exports everything the layer produces:
+
+* the device-folded metrics snapshots (round/request counters, picked-(n,k)
+  and idle-thread histograms, queue high-water marks) plus their Prometheus
+  text exposition;
+* the shared compile-accounting snapshot across every engine touched;
+* the host span table (compile/launch/fetch/finalize boundaries) and the
+  Chrome ``trace_event`` JSON — load it in ``chrome://tracing`` / Perfetto.
+
+Run:  PYTHONPATH=src python examples/obs_demo.py [--fast] [--out DIR]
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro import obs
+from repro.coding.codec import Codec
+from repro.coding.layout import SharedKeyLayout
+from repro.configs.qwen1_5_0_5b import CONFIG as QWEN
+from repro.core import PAPER_READ_3MB, FeedbackPolicy, RequestClass, StaticPolicy
+from repro.core.traces import TraceStore
+from repro.fleet import PolicySpec, grid_cases
+from repro.models.registry import Arch, _FAMILY_MODULES
+from repro.serve import ClosedLoopServer, FusedServingStep, ServePolicy, ServingEngine
+from repro.storage import MemoryStore, Proxy
+from repro.taskq import TaskqSweep
+
+CLS = RequestClass("read3mb", 3.0, PAPER_READ_3MB, k_max=6, r_max=2.0, n_max=12)
+L = 16
+CFG = dataclasses.replace(
+    QWEN, name="obs-demo", n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+    d_ff=256, vocab=2048,
+)
+
+
+def serve_rounds(rounds: int, steps: int) -> dict:
+    arch = Arch(cfg=CFG, module=_FAMILY_MODULES["dense"])
+    eng = ServingEngine(arch, arch.init(jax.random.key(0)), max_seq=64)
+    prompt_len = 16
+    layout = SharedKeyLayout(K=4, r=2, strip_bytes=prompt_len)
+    store = MemoryStore()
+    rng = np.random.default_rng(0)
+    keys = []
+    for i in range(4):
+        toks = rng.integers(0, CFG.vocab, size=(prompt_len,)).astype(np.int32)
+        ServingEngine.store_prompt(store, f"p/{i}", layout, toks)
+        keys.append(f"p/{i}")
+    proxy = Proxy(store, StaticPolicy(8, 4), L=8,
+                  write_policy=FeedbackPolicy(layout.N, layout.K))
+    step = FusedServingStep.for_policy(ServePolicy.tofec(), CLS, L,
+                                       codec=Codec("jnp"))
+    server = ClosedLoopServer(eng, proxy, layout, step, prompt_len=prompt_len)
+    try:
+        for _ in range(rounds):
+            server.serve_round(keys, steps=steps)
+        return server.metrics.snapshot()
+    finally:
+        proxy.close()
+
+
+def taskq_grid(count: int) -> dict:
+    sizes = tuple(CLS.file_mb / k for k in range(1, CLS.k_max + 1))
+    store = TraceStore.generate(PAPER_READ_3MB, sizes, threads=CLS.n_max,
+                                samples=1024, correlation=0.0, seed=3)
+    cases = grid_cases([10.0, 25.0],
+                       [PolicySpec.tofec(), PolicySpec.static(12, 6)],
+                       [0], CLS, L)
+    res = TaskqSweep(chunk=4).run(cases, count,
+                                  store.device_pools(n_max=CLS.n_max))
+    return res.metrics.snapshot()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true", help="smaller run (CI)")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "benchmarks", "results"))
+    args = ap.parse_args()
+
+    obs.set_enabled(True)
+    obs.reset_trace()
+
+    serve_snap = serve_rounds(rounds=2 if args.fast else 4,
+                              steps=2 if args.fast else 4)
+    taskq_snap = taskq_grid(count=128 if args.fast else 512)
+
+    print("== serving metrics ==")
+    print(obs.to_prometheus(serve_snap, prefix="repro"))
+    print("== taskq metrics ==")
+    print(obs.to_prometheus(taskq_snap, prefix="repro"))
+
+    print("== compile accounting ==")
+    for label, row in obs.compile_snapshot().items():
+        print(f"  {label}: traces={row['traces']} launches={row['launches']}")
+
+    print("\n== span table ==")
+    print(obs.get_tracer().format_table())
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    trace_path = obs.write_trace(os.path.join(out_dir, "obs_trace.json"))
+    snap_path = os.path.join(out_dir, "obs_metrics.json")
+    with open(snap_path, "w") as f:
+        json.dump({"meta": obs.run_meta(), "serve": serve_snap,
+                   "taskq": taskq_snap,
+                   "compile": obs.compile_snapshot()}, f, indent=1)
+    print(f"\nwrote {trace_path}")
+    print(f"wrote {snap_path}")
+
+
+if __name__ == "__main__":
+    main()

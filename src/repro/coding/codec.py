@@ -39,12 +39,12 @@ in ``benchmarks/kernel_bench.py``.
 
 from __future__ import annotations
 
-import dataclasses
 import os
 import threading
 
 import numpy as np
 
+from repro import obs
 from repro.coding import gf256, rs
 
 __all__ = [
@@ -82,16 +82,9 @@ def _is_traced(x) -> bool:
     return isinstance(x, Tracer)
 
 
-@dataclasses.dataclass
-class CodecStats:
-    """Observability for the bucketed-jit claim (asserted in tests)."""
-
-    calls: int = 0
-    items: int = 0
-    traces: int = 0  # distinct kernel compilations (incremented at trace time)
-
-    def reset(self) -> None:
-        self.calls = self.items = self.traces = 0
+#: Back-compat alias — codec counters (calls/items/traces) now live on the
+#: shared :class:`repro.obs.CompileStats` so retrace accounting is uniform.
+CodecStats = obs.CompileStats
 
 
 class _Backend:
@@ -139,7 +132,9 @@ class _Backend:
         with self._lock:
             fn = self._fns.get(key)
             if fn is None:
-                fn = self._fns[key] = build()
+                with obs.span("codec.build", backend=self.name,
+                              bucket=str(key)):
+                    fn = self._fns[key] = build()
         return fn
 
     def to_host(self, arr) -> np.ndarray:
@@ -267,7 +262,7 @@ class Codec:
         name = backend or default_backend()
         if name not in _REGISTRY:
             raise ValueError(f"unknown codec backend {name!r}; have {sorted(_REGISTRY)}")
-        self.stats = CodecStats()
+        self.stats = CodecStats(label=f"codec.{name}")
         if name == "pallas":
             self.backend: _Backend = _REGISTRY[name](self.stats, interpret=interpret)
         else:

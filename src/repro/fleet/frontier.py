@@ -19,6 +19,7 @@ import os
 
 import numpy as np
 
+from repro import obs
 from repro.fleet import stats
 
 
@@ -222,6 +223,7 @@ def write_fleet_artifact(
         points = frontier_points(result, warmup_frac)
     artifact = {
         "schema": "repro.fleet/BENCH_fleet/v1",
+        "meta": obs.run_meta(mesh_shape=getattr(result, "mesh_shape", ())),
         "grid_size": len(result.cases),
         "count": result.count,
         "compiles": result.compiles,

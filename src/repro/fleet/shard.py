@@ -37,6 +37,8 @@ import dataclasses
 
 import numpy as np
 
+from repro import obs
+
 
 def resolve_grid_mesh(mesh):
     """Normalize a sweep's ``mesh`` argument to a 1-D jax Mesh (or None).
@@ -102,7 +104,9 @@ class StreamedStats:
     def __init__(self, warmup_frac: float, count: int, red: dict):
         self.warmup_frac = float(warmup_frac)
         self.count = int(count)
-        self.red = {name: np.asarray(v) for name, v in red.items()}
+        # The streamed path's one device→host download of the folded stats.
+        with obs.span("sweep.stream_finalize", stats=len(red)):
+            self.red = {name: np.asarray(v) for name, v in red.items()}
 
     @property
     def warmup(self) -> int:

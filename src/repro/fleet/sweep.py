@@ -31,6 +31,7 @@ import types
 
 import numpy as np
 
+from repro import obs
 from repro.coding.codec import pow2_bucket
 from repro.core.delay_model import RequestClass
 from repro.core.static_optimizer import ClassPlan, build_class_plan
@@ -223,23 +224,9 @@ def tenant_cases(
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
-class SweepStats:
-    """Observability for the bounded-compile claim (asserted in tests).
-
-    ``by_mesh`` splits the trace count by the mesh shape the compilation
-    was built for — ``()`` for the single-device path, ``(D,)`` for a
-    D-device grid mesh — so the mesh-keyed bucket rule is pinnable.
-    """
-
-    traces: int = 0  # distinct sweep compilations (incremented at trace time)
-    launches: int = 0
-    cases: int = 0
-    by_mesh: dict = dataclasses.field(default_factory=dict)
-
-    def reset(self) -> None:
-        self.traces = self.launches = self.cases = 0
-        self.by_mesh.clear()
+#: Back-compat alias — the per-engine counter dataclass now lives in
+#: :mod:`repro.obs` so retrace accounting is uniform across engines.
+SweepStats = obs.CompileStats
 
 
 class ChunkedVmapSweep:
@@ -275,9 +262,10 @@ class ChunkedVmapSweep:
         self.chunk = chunk
         self.t_floor = t_floor or self.T_FLOOR
         self.mesh = resolve_grid_mesh(mesh)
-        self.stats = SweepStats()
+        self.stats = obs.CompileStats(label=f"sweep.{type(self).__name__}")
         self._fns: dict[tuple, object] = {}
         self._plans: dict[tuple, ClassPlan] = {}
+        self._last_metrics = None  # MetricsBuf of the most recent run, if collected
 
     @property
     def mesh_shape(self) -> tuple:
@@ -314,7 +302,9 @@ class ChunkedVmapSweep:
             self.stats.traces += 1  # runs at trace time only
             key = self.mesh_shape
             self.stats.by_mesh[key] = self.stats.by_mesh.get(key, 0) + 1
-            return jax.vmap(one, in_axes=in_axes)(*args)
+            with obs.span("sweep.trace", engine=type(self).__name__,
+                          mesh=str(key)):
+                return jax.vmap(one, in_axes=in_axes)(*args)
 
         donate = tuple(i for i, ax in enumerate(in_axes) if ax == 0)
         if self.mesh is not None:
@@ -323,13 +313,16 @@ class ChunkedVmapSweep:
             fn = shard_grid(fn, self.mesh, in_axes)
         return jax.jit(fn, donate_argnums=donate)
 
-    def _build(self, key: tuple):
+    def _build(self, key: tuple, collect: bool = False):
         raise NotImplementedError
 
-    def _fn_for(self, key: tuple):
-        fn = self._fns.get(key)
+    def _fn_for(self, key: tuple, collect: bool = False):
+        """``collect`` (metrics on/off) is part of the cache key: a constant
+        ``REPRO_OBS`` setting yields exactly the pinned compile counts, and
+        flipping it mid-process recompiles instead of mis-tracing."""
+        fn = self._fns.get((key, collect))
         if fn is None:
-            fn = self._fns[key] = self._build(key)
+            fn = self._fns[(key, collect)] = self._build(key, collect)
         return fn
 
     def _plan_for(self, cls: RequestClass, L: int, eq7_factor: float) -> ClassPlan:
@@ -372,34 +365,53 @@ class ChunkedVmapSweep:
         import jax.numpy as jnp
 
         outs = []
+        mbuf = None
+        engine = type(self).__name__
+        mesh_tag = str(self.mesh_shape)
         bcast = tuple(jnp.asarray(b) for b in broadcast)
         idx = np.empty(chunk, np.intp)  # preallocated chunk-gather indices
         for lo in range(0, G, chunk):
             hi = min(lo + chunk, G)
-            idx[: hi - lo] = np.arange(lo, hi)
-            idx[hi - lo:] = lo  # pad the tail chunk by repetition
-            cfg_np = {name: v[idx] for name, v in cfg.items()}
-            streams_np = (
-                streams(idx) if callable(streams)
-                else tuple(s[idx] for s in streams)
-            )
-            with warnings.catch_warnings():
-                # Donated operands with no same-sized output (e.g. the
-                # (chunk, T, n_max) Exp draws) cannot be aliased; XLA warns
-                # about that expected partial usability on every compile.
-                warnings.filterwarnings(
-                    "ignore", message="Some donated buffers were not usable"
-                )
-                out = fn({name: jnp.asarray(v) for name, v in cfg_np.items()},
-                         *(jnp.asarray(s) for s in streams_np), *bcast)
-            self.stats.launches += 1
-            if fold is None:
-                outs.append({name: v[: hi - lo, :count] for name, v in out.items()})
-            else:
-                red = fold({name: v[:, :count] for name, v in out.items()},
-                           cfg_np, streams_np)
-                outs.append({name: v[: hi - lo] for name, v in red.items()})
+            with obs.span("sweep.chunk", engine=engine, mesh=mesh_tag,
+                          rows=hi - lo):
+                idx[: hi - lo] = np.arange(lo, hi)
+                idx[hi - lo:] = lo  # pad the tail chunk by repetition
+                with obs.span("sweep.hostgen", engine=engine):
+                    cfg_np = {name: v[idx] for name, v in cfg.items()}
+                    streams_np = (
+                        streams(idx) if callable(streams)
+                        else tuple(s[idx] for s in streams)
+                    )
+                with warnings.catch_warnings():
+                    # Donated operands with no same-sized output (e.g. the
+                    # (chunk, T, n_max) Exp draws) cannot be aliased; XLA warns
+                    # about that expected partial usability on every compile.
+                    warnings.filterwarnings(
+                        "ignore", message="Some donated buffers were not usable"
+                    )
+                    with obs.span("sweep.launch", engine=engine, mesh=mesh_tag):
+                        out = fn(
+                            {name: jnp.asarray(v) for name, v in cfg_np.items()},
+                            *(jnp.asarray(s) for s in streams_np), *bcast)
+                self.stats.launches += 1
+                # The per-case metrics fold rides the same launch: slice off
+                # the tail padding, row-reduce on device, merge across chunks
+                # (mirrors the streamed frontier folds — no host syncs).
+                out = dict(out)
+                mb = out.pop("obs", None)
+                if mb is not None:
+                    mb = mb.reduce_rows(hi - lo)
+                    mbuf = mb if mbuf is None else mbuf.merge(mb)
+                if fold is None:
+                    outs.append(
+                        {name: v[: hi - lo, :count] for name, v in out.items()})
+                else:
+                    with obs.span("sweep.fold", engine=engine):
+                        red = fold({name: v[:, :count] for name, v in out.items()},
+                                   cfg_np, streams_np)
+                    outs.append({name: v[: hi - lo] for name, v in red.items()})
         self.stats.cases += G
+        self._last_metrics = mbuf
         return {
             name: jnp.concatenate([o[name] for o in outs], axis=0)
             for name in outs[0]
@@ -455,6 +467,8 @@ class SweepResult:
     compiles: int
     launches: int
     streamed: object = None  # StreamedStats for streamed runs
+    metrics: object = None  # MetricsBuf folded across chunks (REPRO_OBS=1)
+    mesh_shape: tuple = ()  # device-mesh shape the run launched on
 
     def to_numpy(self) -> dict[str, np.ndarray]:
         return {k: np.asarray(v) for k, v in self.out.items()}
@@ -476,7 +490,7 @@ class FleetSweep(ChunkedVmapSweep):
             self.mesh_shape,
         )
 
-    def _build(self, key: tuple):
+    def _build(self, key: tuple, collect: bool = False):
         n_max = key[2]
 
         def one(cfg, inter, exps):
@@ -487,9 +501,14 @@ class FleetSweep(ChunkedVmapSweep):
                 psi_bar=cfg["psi_bar"], psi_tilde=cfg["psi_tilde"],
                 J=cfg["J"], L=cfg["L"], alpha=cfg["alpha"],
             )
-            return tofec_scan_core(
+            out = tofec_scan_core(
                 p, cfg["h_k"], cfg["h_n"], cfg["r_max"], inter, exps, n_max=n_max
             )
+            if collect:
+                out = dict(out)
+                out["obs"] = obs.sweep_point_metrics(
+                    out, "fleet", valid=obs.valid_mask(cfg, inter.shape[-1]))
+            return out
 
         return self._vmapped(one, in_axes=(0, 0, 0))
 
@@ -551,6 +570,11 @@ class FleetSweep(ChunkedVmapSweep):
 
         cfg = self._stack_cfg(cases, hk_len, hn_len)
         G = len(cases)
+        collect = obs.enabled()
+        if collect:
+            # Runtime row, not a cache-key entry: runs sharing a pow2 time
+            # bucket keep sharing one compilation.
+            cfg["obs_count"] = np.full(G, count, np.int32)
 
         def chunk_streams(idx):
             inter = np.zeros((len(idx), T_b), np.float32)
@@ -570,7 +594,7 @@ class FleetSweep(ChunkedVmapSweep):
                 exps[j, :count, : case.cls.n_max] = ex
             return inter, exps
 
-        fn = self._fn_for(key)
+        fn = self._fn_for(key, collect)
         fold = (
             frontier_fold(int(count * spec.warmup_frac), hn_len)
             if spec else None
@@ -587,4 +611,6 @@ class FleetSweep(ChunkedVmapSweep):
             streamed=(
                 StreamedStats(spec.warmup_frac, count, stacked) if spec else None
             ),
+            metrics=self._last_metrics,
+            mesh_shape=self.mesh_shape,
         )

@@ -1,0 +1,57 @@
+"""repro.obs — unified telemetry across the serving tower and sweep engines.
+
+Three layers (see ROADMAP "Conventions"):
+
+* device-resident metrics — :class:`MetricsBuf` pytrees threaded through
+  the jitted hot paths and folded per chunk (no host syncs);
+* host span tracing — :func:`span` / :func:`traced` around compile /
+  launch / upload / finalize boundaries, exported as Chrome trace JSON via
+  :func:`write_trace` and aggregate tables via :func:`aggregate`;
+* shared compile accounting — :class:`CompileStats` behind every engine's
+  ``stats`` object, queryable in one shot via :func:`compile_snapshot`.
+
+Everything is gated on ``REPRO_OBS=1`` (or :func:`set_enabled`); disabled,
+the layer costs one branch per site and changes no compiled graph.
+"""
+from repro.obs.state import enabled, set_enabled
+from repro.obs.compile import CompileStats, compile_snapshot, register_stats
+from repro.obs.metrics import (
+    PICK_BINS,
+    MetricsBuf,
+    sweep_point_metrics,
+    to_prometheus,
+    valid_mask,
+)
+from repro.obs.trace import (
+    Tracer,
+    aggregate,
+    get_tracer,
+    reset_trace,
+    span,
+    traced,
+    write_trace,
+)
+from repro.obs.meta import SCHEMA_VERSION, git_rev, run_meta
+
+__all__ = [
+    "enabled",
+    "set_enabled",
+    "CompileStats",
+    "compile_snapshot",
+    "register_stats",
+    "MetricsBuf",
+    "PICK_BINS",
+    "sweep_point_metrics",
+    "valid_mask",
+    "to_prometheus",
+    "Tracer",
+    "span",
+    "traced",
+    "get_tracer",
+    "write_trace",
+    "aggregate",
+    "reset_trace",
+    "SCHEMA_VERSION",
+    "git_rev",
+    "run_meta",
+]

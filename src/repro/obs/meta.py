@@ -1,0 +1,42 @@
+"""Uniform run metadata stamped into every BENCH_*.json artifact.
+
+The perf-regression gate (benchmarks/gate.py) keys its tolerances off these
+fields — a wallclock number recorded on a 4-core CI runner is not comparable
+to one from a 32-core dev box, but a compile count is.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+
+# Version of the *meta block* shared by all artifacts (each artifact keeps
+# its own "schema" path string for payload layout).
+SCHEMA_VERSION = 2
+
+
+def git_rev() -> str | None:
+    """Short rev of the repo containing this file; None outside a checkout."""
+    try:
+        proc = subprocess.run(
+            ["git", "rev-parse", "--short=12", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True,
+            text=True,
+            timeout=10,
+        )
+    except (OSError, subprocess.SubprocessError):
+        return None
+    rev = proc.stdout.strip()
+    return rev if proc.returncode == 0 and rev else None
+
+
+def run_meta(mesh_shape=None) -> dict:
+    import jax
+
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "git_rev": git_rev(),
+        "host_cores": os.cpu_count() or 1,
+        "host_devices": jax.device_count(),
+        "mesh_shape": list(mesh_shape) if mesh_shape else [],
+    }

@@ -1,0 +1,179 @@
+"""Device-resident metrics.
+
+:class:`MetricsBuf` is a registered-dataclass pytree of int32 counters,
+fixed-bucket int32 histograms, and float32 high-water marks.  Every update
+is a pure functional op (frozen dataclass -> new instance) made of plain
+``jnp`` arithmetic, so a buf threads straight through ``jit`` / ``vmap`` /
+``lax.scan`` carries without adding host syncs.  Metric *names* live in the
+dict keys, which are pytree structure: two bufs with the same field names
+are the same pytree type under tracing, and adding a metric to an existing
+buf changes the cache key (-> one new compile), never silently retraces.
+
+Collection sites fold per chunk exactly like the PR 6 streaming frontier
+reductions: the vmapped engine returns a per-case buf, the launcher slices
+off tail padding, row-reduces on device, and union-merges across chunks.
+The only host sync is :meth:`MetricsBuf.snapshot`, on demand.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Shared bucket count for picked-(n, k) histograms across the sweep engines.
+# Codes in the repro use n well below 32; the last bucket absorbs the clip.
+PICK_BINS = 33
+
+
+def _union(a: dict, b: dict, op) -> dict:
+    out = dict(a)
+    for k, v in b.items():
+        out[k] = op(out[k], v) if k in out else v
+    return out
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MetricsBuf:
+    """Counters + fixed-bucket histograms + high-water marks as device arrays.
+
+    counters: name -> () int32 running sum
+    hists:    name -> (B,) int32; a value v lands in bucket clip(int(v), 0, B-1)
+    highs:    name -> () float32 running max (non-negative quantities; zeros init)
+    """
+
+    counters: dict
+    hists: dict
+    highs: dict
+
+    @classmethod
+    def zeros(cls, counters=(), hists=None, highs=()) -> "MetricsBuf":
+        return cls(
+            counters={n: jnp.zeros((), jnp.int32) for n in counters},
+            hists={n: jnp.zeros((int(b),), jnp.int32) for n, b in dict(hists or {}).items()},
+            highs={n: jnp.zeros((), jnp.float32) for n in highs},
+        )
+
+    # ---- in-trace updates -------------------------------------------------
+    def count(self, name: str, by=1) -> "MetricsBuf":
+        c = dict(self.counters)
+        c[name] = c[name] + jnp.asarray(by, jnp.int32)
+        return dataclasses.replace(self, counters=c)
+
+    def observe(self, name: str, value, weight=None) -> "MetricsBuf":
+        """Bucket scalar or vector values; repeated indices scatter-add.
+        ``weight`` (same shape, int) scales each observation — pass a 0/1
+        validity mask to drop padded entries without a dynamic shape."""
+        h = dict(self.hists)
+        idx = jnp.clip(jnp.asarray(value).astype(jnp.int32), 0, h[name].shape[-1] - 1)
+        w = 1 if weight is None else jnp.asarray(weight, jnp.int32)
+        h[name] = h[name].at[idx].add(w)
+        return dataclasses.replace(self, hists=h)
+
+    def high(self, name: str, value) -> "MetricsBuf":
+        hi = dict(self.highs)
+        v = jnp.asarray(value, jnp.float32)
+        if v.ndim:
+            v = v.max()
+        hi[name] = jnp.maximum(hi[name], v)
+        return dataclasses.replace(self, highs=hi)
+
+    # ---- folds ------------------------------------------------------------
+    def reduce_rows(self, rows: int | None = None) -> "MetricsBuf":
+        """Fold a vmapped buf (leading batch axis on every leaf) to scalars:
+        sum counters/hists, max highs.  ``rows`` drops the tail padding a
+        chunk launch adds by repeating its last real row."""
+
+        def cut(a):
+            return a[:rows] if rows is not None else a
+
+        return MetricsBuf(
+            counters={n: cut(v).sum(axis=0) for n, v in self.counters.items()},
+            hists={n: cut(v).sum(axis=0) for n, v in self.hists.items()},
+            highs={n: cut(v).max(axis=0) for n, v in self.highs.items()},
+        )
+
+    def merge(self, other: "MetricsBuf") -> "MetricsBuf":
+        """Union-merge: add counters/hists, max highs; disjoint names pass through."""
+        return MetricsBuf(
+            counters=_union(self.counters, other.counters, lambda a, b: a + b),
+            hists=_union(self.hists, other.hists, lambda a, b: a + b),
+            highs=_union(self.highs, other.highs, jnp.maximum),
+        )
+
+    # ---- export -----------------------------------------------------------
+    def snapshot(self) -> dict:
+        """The one host sync: device arrays -> plain python dicts."""
+        return {
+            "counters": {n: int(np.asarray(v)) for n, v in self.counters.items()},
+            "hists": {n: np.asarray(v).astype(int).tolist() for n, v in self.hists.items()},
+            "highs": {n: float(np.asarray(v)) for n, v in self.highs.items()},
+        }
+
+    def to_prometheus(self, prefix: str = "repro") -> str:
+        return to_prometheus(self.snapshot(), prefix=prefix)
+
+
+def to_prometheus(snap: dict, prefix: str = "repro") -> str:
+    """Prometheus-style text exposition of a :meth:`MetricsBuf.snapshot`.
+
+    Histogram buckets are unit-width (`le="i"` covers values <= i); the last
+    bucket is `+Inf` (clipped tail), so cumulative counts are monotone.
+    """
+    lines = []
+    for n, v in sorted(snap.get("counters", {}).items()):
+        name = f"{prefix}_{n}_total"
+        lines.append(f"# TYPE {name} counter")
+        lines.append(f"{name} {v}")
+    for n, buckets in sorted(snap.get("hists", {}).items()):
+        name = f"{prefix}_{n}"
+        lines.append(f"# TYPE {name} histogram")
+        cum = 0
+        for i, c in enumerate(buckets):
+            cum += int(c)
+            le = "+Inf" if i == len(buckets) - 1 else str(i)
+            lines.append(f'{name}_bucket{{le="{le}"}} {cum}')
+        lines.append(f"{name}_count {cum}")
+    for n, v in sorted(snap.get("highs", {}).items()):
+        name = f"{prefix}_{n}"
+        lines.append(f"# TYPE {name} gauge")
+        lines.append(f"{name} {v}")
+    return "\n".join(lines) + "\n"
+
+
+def sweep_point_metrics(out: dict, prefix: str, valid=None) -> "MetricsBuf":
+    """Per-case metrics derived from a scan-core output dict inside the
+    vmapped ``one`` — requests served, tasks issued, picked-(n, k)
+    histograms, and the worst per-request delay.  Traced alongside the
+    primary outputs; the launcher folds it per chunk.
+
+    ``valid`` is a (T,) boolean mask marking real arrivals: chunked
+    launches pad the time axis to the pow2 bucket (`obs_count` config
+    rows carry the true count), and padded steps must not be counted."""
+    n = out["n"]
+    k = out["k"]
+    if valid is None:
+        valid = jnp.ones(n.shape[-1], bool)
+    w = valid.astype(jnp.int32)
+    buf = MetricsBuf.zeros(
+        counters=(f"{prefix}_requests", f"{prefix}_tasks"),
+        hists={f"{prefix}_pick_n": PICK_BINS, f"{prefix}_pick_k": PICK_BINS},
+        highs=(f"{prefix}_delay_hi",),
+    )
+    buf = buf.count(f"{prefix}_requests", w.sum())
+    buf = buf.count(f"{prefix}_tasks", (n.astype(jnp.int32) * w).sum())
+    buf = buf.observe(f"{prefix}_pick_n", n, weight=w)
+    buf = buf.observe(f"{prefix}_pick_k", k, weight=w)
+    buf = buf.high(f"{prefix}_delay_hi", jnp.where(valid, out["total"], 0.0))
+    return buf
+
+
+def valid_mask(cfg: dict, horizon: int):
+    """(T,) mask of real arrivals from the per-case ``obs_count`` row the
+    sweeps add when collection is on (None when absent)."""
+    cnt = cfg.get("obs_count")
+    if cnt is None:
+        return None
+    return jnp.arange(horizon) < cnt

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.fleet.stats import masked_percentiles
 
 
@@ -194,6 +195,7 @@ def write_multiclass_artifact(
         points = multiclass_points(result, warmup_frac)
     artifact = {
         "schema": "repro.sched/BENCH_multiclass/v1",
+        "meta": obs.run_meta(mesh_shape=getattr(result, "mesh_shape", ())),
         "grid_size": len(result.cases),
         "count": result.count,
         "compiles": result.compiles,

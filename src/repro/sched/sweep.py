@@ -23,6 +23,7 @@ import types
 
 import numpy as np
 
+from repro import obs
 from repro.coding.codec import pow2_bucket
 from repro.fleet.sweep import ChunkedVmapSweep, PolicySpec, policy_tables
 from repro.fleet.workloads import TenantMix
@@ -165,6 +166,8 @@ class SchedResult:
     compiles: int
     launches: int
     streamed: object = None  # StreamedStats for streamed runs
+    metrics: object = None  # MetricsBuf folded across chunks (REPRO_OBS=1)
+    mesh_shape: tuple = ()  # device-mesh shape the run launched on
 
     def to_numpy(self) -> dict[str, np.ndarray]:
         return {k: np.asarray(v) for k, v in self.out.items()}
@@ -195,10 +198,11 @@ class SchedSweep(ChunkedVmapSweep):
             self.mesh_shape,
         )
 
-    def _build(self, key: tuple):
+    def _build(self, key: tuple, collect: bool = False):
         n_max = key[3]
 
         def one(cfg, inter, cls_ids, exps):
+            from repro import obs
             from repro.sched.scan import multiclass_scan_core
 
             p = types.SimpleNamespace(
@@ -206,10 +210,15 @@ class SchedSweep(ChunkedVmapSweep):
                 psi_bar=cfg["psi_bar"], psi_tilde=cfg["psi_tilde"],
                 J=cfg["J"], L=cfg["L"], alpha=cfg["alpha"], r_max=cfg["r_max"],
             )
-            return multiclass_scan_core(
+            out = multiclass_scan_core(
                 p, cfg["h_k"], cfg["h_n"], cfg["disc"], cfg["prio"], cfg["wfq_w"],
                 inter, cls_ids, exps, n_max=n_max,
             )
+            if collect:
+                out = dict(out)
+                out["obs"] = obs.sweep_point_metrics(
+                    out, "sched", valid=obs.valid_mask(cfg, inter.shape[-1]))
+            return out
 
         return self._vmapped(one, in_axes=(0, 0, 0, 0))
 
@@ -282,6 +291,9 @@ class SchedSweep(ChunkedVmapSweep):
 
         cfg = self._stack_cfg(cases, C, hk_len, hn_len)
         G = len(cases)
+        collect = obs.enabled()
+        if collect:
+            cfg["obs_count"] = np.full(G, count, np.int32)
         # Materialized runs keep the class-id streams for the per-class
         # reductions; streamed runs fold them per chunk and never stack them.
         ids_full = None if spec else np.zeros((G, count), np.int32)
@@ -308,7 +320,7 @@ class SchedSweep(ChunkedVmapSweep):
                     ids_full[i] = ci
             return inter, ids, exps
 
-        fn = self._fn_for(key)
+        fn = self._fn_for(key, collect)
         fold = (
             multiclass_fold(int(count * spec.warmup_frac), C, count)
             if spec else None
@@ -327,4 +339,6 @@ class SchedSweep(ChunkedVmapSweep):
             streamed=(
                 StreamedStats(spec.warmup_frac, count, stacked) if spec else None
             ),
+            metrics=self._last_metrics,
+            mesh_shape=self.mesh_shape,
         )

@@ -59,6 +59,7 @@ from repro.core.delay_model import RequestClass
 from repro.core.static_optimizer import build_class_plan
 from repro.models.registry import Arch
 from repro.storage.proxy import Proxy, store_coded_object
+from repro import obs
 
 
 #: ServeTables.pol ids: threshold-table controllers (tofec / static / fixedk)
@@ -233,10 +234,21 @@ class FusedServingStep:
             tables = ServeTables.from_tofec(tables, alpha=alpha)
         self.tables = tables
         self.alpha = alpha
-        self.traces = 0  # outer-jit compilations (bounded by shape buckets)
+        # Outer-jit compilations (bounded by shape buckets); shared
+        # CompileStats so retrace accounting is uniform across engines —
+        # ``.traces`` stays the public pin via the property below.
+        self.stats = obs.CompileStats(label="serve.FusedServingStep")
         self._fns: dict[tuple, object] = {}
         self._lock = threading.Lock()
         self.reset()
+
+    @property
+    def traces(self) -> int:
+        return self.stats.traces
+
+    @traces.setter
+    def traces(self, value: int) -> None:
+        self.stats.traces = value
 
     @classmethod
     def for_class(cls, request_class, L: int, *, codec: codec_mod.Codec | None = None,
@@ -320,11 +332,13 @@ class FusedServingStep:
         mats = self.codec.decode_mats(present, n, k)
         mats_p, rows_p, key = self.codec.pad_to_bucket("dec", mats, rows, n, k)
         fn = self._fn(key)
-        self.carry, n_nxt, k_nxt, out = fn(
-            self.tables, self.carry,
-            jnp.asarray(self.codec.backend.prep_mats(mats_p)), jnp.asarray(rows_p),
-            jnp.float32(q), jnp.float32(dt),
-        )
+        with obs.span("serve.decode_batch", bucket=str(key), batch=batch):
+            self.carry, n_nxt, k_nxt, out = fn(
+                self.tables, self.carry,
+                jnp.asarray(self.codec.backend.prep_mats(mats_p)), jnp.asarray(rows_p),
+                jnp.float32(q), jnp.float32(dt),
+            )
+        self.stats.launches += 1
         data = np.asarray(out)[:batch, :k, :B]
         return (data[0] if single else data), (int(n_nxt), int(k_nxt))
 
@@ -343,17 +357,20 @@ class FusedServingStep:
             fn = self._fn(("adm",))
             self.carry, n_nxt, k_nxt = fn(self.tables, self.carry,
                                           jnp.float32(q), jnp.float32(dt))
+            self.stats.launches += 1
             return (data[0] if single else data), (int(n_nxt), int(k_nxt))
         m = n - k
         par = rs.cauchy_parity_matrix(n, k)
         mats = np.broadcast_to(par, (batch, m, k))
         mats_p, data_p, key = self.codec.pad_to_bucket("enc", mats, data, n, k)
         fn = self._fn(key)
-        self.carry, n_nxt, k_nxt, out = fn(
-            self.tables, self.carry,
-            jnp.asarray(self.codec.backend.prep_mats(mats_p)), jnp.asarray(data_p),
-            jnp.float32(q), jnp.float32(dt),
-        )
+        with obs.span("serve.encode_batch", bucket=str(key), batch=batch):
+            self.carry, n_nxt, k_nxt, out = fn(
+                self.tables, self.carry,
+                jnp.asarray(self.codec.backend.prep_mats(mats_p)), jnp.asarray(data_p),
+                jnp.float32(q), jnp.float32(dt),
+            )
+        self.stats.launches += 1
         coded = np.asarray(out)[:batch, :n, :B]
         return (coded[0] if single else coded), (int(n_nxt), int(k_nxt))
 
@@ -533,10 +550,26 @@ class ClosedLoopServer:
         if write_policy is None and isinstance(proxy.write_policy, FeedbackPolicy):
             write_policy = proxy.write_policy
         self.write_policy = write_policy
-        self.traces = 0
+        self.stats = obs.CompileStats(label="serve.ClosedLoopServer")
         self._fns: dict[tuple, object] = {}
         self._lock = threading.Lock()
         self._last_now: float | None = None
+        self._mbuf = None  # device MetricsBuf, created on first collected round
+
+    @property
+    def traces(self) -> int:
+        return self.stats.traces
+
+    @traces.setter
+    def traces(self, value: int) -> None:
+        self.stats.traces = value
+
+    @property
+    def metrics(self):
+        """The device-resident :class:`repro.obs.MetricsBuf` accumulated
+        across collected rounds (None until a round runs with REPRO_OBS=1).
+        Call ``.snapshot()`` on it for plain dicts — the only host sync."""
+        return self._mbuf
 
     def put(self, key: str, payload: bytes, cls_id: int = 0):
         """Queue a write through the proxy (encodes under the fed-back code
@@ -553,8 +586,9 @@ class ClosedLoopServer:
         max_seq = self.engine.max_seq
         K, b, plen = self.layout.K, self.layout.strip_bytes, self.prompt_len
         vocab = arch.cfg.vocab
+        collect = key[-1]  # metrics flag is part of the cache key
 
-        def fused(tables, carry, mats, rows, q, dt, params):
+        def core(tables, carry, mats, rows, q, dt, params):
             self.traces += 1  # runs at trace time only
             carry, n_nxt, k_nxt = serve_policy_step(carry, q, dt, tables)
             data = backend.matmul_traced(mats, rows)
@@ -565,16 +599,60 @@ class ClosedLoopServer:
             logits, cache = arch.prefill_tokens(params, toks, max_seq=max_seq)
             return carry, n_nxt, k_nxt, toks, logits, cache
 
+        if collect:
+
+            def fused(tables, carry, mats, rows, q, dt, params,
+                      mbuf, requested, served, errs):
+                carry, n_nxt, k_nxt, toks, logits, cache = core(
+                    tables, carry, mats, rows, q, dt, params)
+                # Pure additions on the side buf: the primary outputs'
+                # graph is identical to the collect=False trace.
+                mbuf = (mbuf.count("serve_rounds", 1)
+                            .count("serve_requested", requested)
+                            .count("serve_served", served)
+                            .count("serve_decode_errors", errs)
+                            .observe("serve_q", q)
+                            .observe("serve_pick_n", n_nxt)
+                            .observe("serve_pick_k", k_nxt)
+                            .observe("serve_batch", served)
+                            .high("serve_q_hi", q))
+                return carry, n_nxt, k_nxt, toks, logits, cache, mbuf
+
+        else:
+            fused = core
+
         fn = jax.jit(fused)
         with self._lock:
             fn = self._fns.setdefault(key, fn)
         return fn
 
+    #: fixed bucket counts for the round histograms (values clip into the
+    #: last bucket); one shared buf shape per server, so adding a round
+    #: never changes the pytree structure (-> no retrace).
+    _Q_BINS = 64
+
+    def _zero_mbuf(self):
+        return obs.MetricsBuf.zeros(
+            counters=("serve_rounds", "serve_requested", "serve_served",
+                      "serve_decode_errors"),
+            hists={"serve_q": self._Q_BINS, "serve_batch": self._Q_BINS,
+                   "serve_pick_n": obs.PICK_BINS,
+                   "serve_pick_k": obs.PICK_BINS},
+            highs=("serve_q_hi",),
+        )
+
     def serve_round(self, keys: list[str], *, steps: int,
                     q: float | None = None) -> ClosedLoopResult:
         """One closed-loop serving round over ``keys``; see class docstring."""
+        with obs.span("serve.round", keys=len(keys), steps=steps):
+            return self._serve_round(keys, steps=steps, q=q)
+
+    def _serve_round(self, keys: list[str], *, steps: int,
+                     q: float | None = None) -> ClosedLoopResult:
         payload_len = self.prompt_len * 4
-        results = self.proxy.read_many(keys, self.layout, payload_len, raw=True)
+        with obs.span("serve.fetch", keys=len(keys)):
+            results = self.proxy.read_many(keys, self.layout, payload_len,
+                                           raw=True)
         ok = [r.ok for r in results]
         good = [r for r in results if r.ok]
         if not good:
@@ -592,21 +670,37 @@ class ClosedLoopServer:
         n, k = self.layout.N, self.layout.K
         mats = codec.decode_mats(np.asarray(present, np.int64), n, k)
         mats_p, rows_p, bkey = codec.pad_to_bucket("dec", mats, rows, n, k)
-        fn = self._fn(("pfd", *bkey, self.prompt_len, self.layout.strip_bytes))
-        carry, n_nxt, k_nxt, _toks, logits, cache = fn(
+        collect = obs.enabled()
+        key = ("pfd", *bkey, self.prompt_len, self.layout.strip_bytes, collect)
+        fn = self._fn(key)
+        args = (
             self.step.tables, self.step.carry,
             jnp.asarray(codec.backend.prep_mats(mats_p)), jnp.asarray(rows_p),
             jnp.float32(q_sig), jnp.float32(dt), self.engine.params,
         )
+        with obs.span("serve.launch", bucket=str(key), batch=len(good)):
+            if collect:
+                if self._mbuf is None:
+                    self._mbuf = self._zero_mbuf()
+                # Host-known round tallies ride as runtime scalars; the
+                # error count is the per-item mask's failed-fetch tally.
+                carry, n_nxt, k_nxt, _toks, logits, cache, self._mbuf = fn(
+                    *args, self._mbuf, jnp.int32(len(keys)),
+                    jnp.int32(len(good)), jnp.int32(len(keys) - len(good)),
+                )
+            else:
+                carry, n_nxt, k_nxt, _toks, logits, cache = fn(*args)
+        self.stats.launches += 1
         self.step.carry = carry
         # Generation continues at the padded batch (same trace each round);
         # rows are sliced back to the served subset on host at the end.
         gen = []
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        for _ in range(steps):
-            gen.append(np.asarray(tok)[:, 0])
-            logits, cache = self.engine._decode(self.engine.params, tok, cache)
+        with obs.span("serve.generate", steps=steps):
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            for _ in range(steps):
+                gen.append(np.asarray(tok)[:, 0])
+                logits, cache = self.engine._decode(self.engine.params, tok, cache)
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         tokens = np.stack(gen, axis=1)[: len(good)]
         # Pull the controller's pick to host only now: generation already
         # forced the launch, so this sync is free (reading it before the

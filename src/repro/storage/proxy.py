@@ -55,6 +55,7 @@ from collections import deque
 
 import numpy as np
 
+from repro import obs
 from repro.coding import codec as codec_mod
 from repro.coding.layout import SharedKeyLayout
 from repro.core.controller import Policy
@@ -189,8 +190,10 @@ class Proxy:
         true backlog (TOFEC's q signal) and lets the admit loop reconstruct
         the completions in batched decode calls instead of one per request.
         """
-        reqs = [self.read_async(k, layout, payload_len, cls_id, raw=raw) for k in keys]
-        return [self.wait(r, timeout) for r in reqs]
+        with obs.span("proxy.read_many", keys=len(keys), raw=raw):
+            reqs = [self.read_async(k, layout, payload_len, cls_id, raw=raw)
+                    for k in keys]
+            return [self.wait(r, timeout) for r in reqs]
 
     def write(self, key: str, layout: SharedKeyLayout, payload: bytes,
               cls_id: int = 0, timeout: float = 60.0) -> RequestResult:
@@ -219,11 +222,13 @@ class Proxy:
         with self._state_lock:
             reqs, self._write_reqs = self._write_reqs, []
         deadline = time.monotonic() + timeout
-        for r in reqs:
-            if not r.settled.wait(max(deadline - time.monotonic(), 0.0)):
-                with self._state_lock:
-                    self._write_reqs.extend(rr for rr in reqs if not rr.settled.is_set())
-                raise TimeoutError(f"write {r.key} did not settle")
+        with obs.span("proxy.flush_writes", writes=len(reqs)):
+            for r in reqs:
+                if not r.settled.wait(max(deadline - time.monotonic(), 0.0)):
+                    with self._state_lock:
+                        self._write_reqs.extend(
+                            rr for rr in reqs if not rr.settled.is_set())
+                    raise TimeoutError(f"write {r.key} did not settle")
 
     def close(self):
         self._shutdown = True
@@ -350,8 +355,9 @@ class Proxy:
         for r in todo:
             groups.setdefault((r.layout, r.n, r.k), []).append(r)
         for (lay, n, k), reqs in groups.items():
-            coded = lay.encode_files([r.payload for r in reqs], codec=self.codec,
-                                     n=n, k=k)
+            with obs.span("proxy.encode_writes", n=n, k=k, writes=len(reqs)):
+                coded = lay.encode_files([r.payload for r in reqs],
+                                         codec=self.codec, n=n, k=k)
             for r, c in zip(reqs, coded):
                 r.coded = c
 
@@ -465,6 +471,10 @@ class Proxy:
         them. Runs on the worker that resolved the last task (background —
         off the request's completion path).
         """
+        with obs.span("proxy.finalize_write", key=req.key, n=req.n, k=req.k):
+            self._finalize_write_inner(req)
+
+    def _finalize_write_inner(self, req: _Request) -> None:
         try:
             _, _, m = req.layout.code_for_k(req.k)
             b = req.layout.strip_bytes

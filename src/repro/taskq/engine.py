@@ -54,6 +54,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.controller import tofec_threshold_step
 from repro.taskq.policies import POL_GREEDY, greedy_select
 
@@ -69,6 +70,8 @@ def taskq_scan_core(
     *,
     L: int,
     q_cap: int = 128,
+    collect: bool = False,
+    valid: jax.Array | None = None,
 ) -> dict[str, jax.Array]:
     """Traceable single-point engine body shared by the jitted entry point
     and :class:`repro.taskq.sweep.TaskqSweep`.
@@ -88,6 +91,14 @@ def taskq_scan_core(
     Returns per-request (T,) arrays: ``total``/``queueing``/``service``
     delays (queueing = first task start − arrival, matching §II-C's D_q)
     and the chosen ``n``/``k``.
+
+    ``collect`` (static) additionally emits per-step exact observables —
+    cancellation counts split queue/service, the idle-thread count and the
+    backlog length — and reduces them on device into an ``"obs"``
+    :class:`repro.obs.MetricsBuf` entry (idle histogram, cancellation
+    counters, backlog high-water mark). ``valid`` is an optional (T,) mask
+    of real arrivals so bucket-padded launches don't count padding. The
+    primary outputs' graph is untouched either way.
     """
     W = pools.shape[2]
     n_cap = W
@@ -157,7 +168,15 @@ def taskq_scan_core(
         pos = (pos + 1) % q_cap
         d_q = a - t
         d_s = D - a
-        return (t, b, ring, pos, q_ewma), (d_q + d_s, d_q, d_s, n, k)
+        ys = (d_q + d_s, d_q, d_s, n, k)
+        if collect:
+            # Started tasks have S < D (and X > 0 ⇒ S ≥ D implies C > D),
+            # so the cancelled n−k split exactly into queue vs in-service.
+            live = lane < n
+            cancel_q = jnp.sum(live & (S >= D)).astype(jnp.int32)
+            cancel_s = jnp.sum(live & (S < D) & (C > D)).astype(jnp.int32)
+            ys = ys + (idle, q, cancel_q, cancel_s)
+        return (t, b, ring, pos, q_ewma), ys
 
     init = (
         jnp.float32(0.0),
@@ -166,13 +185,42 @@ def taskq_scan_core(
         jnp.int32(0),
         jnp.float32(-1.0),  # q̄ cold-start sentinel (tofec_threshold_step)
     )
-    _, (tot, dq, ds, ns, ks) = jax.lax.scan(
-        step, init, (interarrivals, pool_idx)
+    _, ys = jax.lax.scan(step, init, (interarrivals, pool_idx))
+    tot, dq, ds, ns, ks = ys[:5]
+    out = {"total": tot, "queueing": dq, "service": ds, "n": ns, "k": ks}
+    if collect:
+        idle_t, q_t, cq_t, cs_t = ys[5:]
+        if valid is None:
+            valid = jnp.ones(tot.shape[-1], bool)
+        w = valid.astype(jnp.int32)
+        # Cancellations *issued*: tasks with C > D. Ties C == D complete
+        # with the request (nothing to cancel), so this can undershoot the
+        # n−k budget by the tie count — it is the exact cancel-RPC tally.
+        buf = obs.MetricsBuf.zeros(
+            counters=("taskq_cancelled", "taskq_cancel_queue",
+                      "taskq_cancel_service"),
+            hists={"taskq_idle": L + 1},
+            highs=("taskq_q_hi",),
+        )
+        buf = buf.count("taskq_cancelled", ((cq_t + cs_t) * w).sum())
+        buf = buf.count("taskq_cancel_queue", (cq_t * w).sum())
+        buf = buf.count("taskq_cancel_service", (cs_t * w).sum())
+        buf = buf.observe("taskq_idle", idle_t, weight=w)
+        buf = buf.high("taskq_q_hi", jnp.where(valid, q_t, 0.0))
+        out["obs"] = buf
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("L", "q_cap", "collect"))
+def _taskq_scan_jit(
+    cfg, interarrivals, pool_idx, pools, pool_sizes, *, L, q_cap, collect
+):
+    return taskq_scan_core(
+        cfg, interarrivals, pool_idx, pools, pool_sizes,
+        L=L, q_cap=q_cap, collect=collect,
     )
-    return {"total": tot, "queueing": dq, "service": ds, "n": ns, "k": ks}
 
 
-@functools.partial(jax.jit, static_argnames=("L", "q_cap"))
 def taskq_scan(
     cfg,
     interarrivals: jax.Array,
@@ -182,9 +230,15 @@ def taskq_scan(
     *,
     L: int,
     q_cap: int = 128,
+    collect: bool | None = None,
 ) -> dict[str, jax.Array]:
     """Jitted single-grid-point entry point (the serial-scan baseline of
-    ``benchmarks.kernel_bench.bench_taskq_engine``)."""
-    return taskq_scan_core(
-        cfg, interarrivals, pool_idx, pools, pool_sizes, L=L, q_cap=q_cap
+    ``benchmarks.kernel_bench.bench_taskq_engine``). ``collect`` defaults
+    to the ``REPRO_OBS`` gate; it is a static jit arg, so a constant
+    setting keeps compile counts at their pinned values."""
+    if collect is None:
+        collect = obs.enabled()
+    return _taskq_scan_jit(
+        cfg, interarrivals, pool_idx, pools, pool_sizes,
+        L=L, q_cap=q_cap, collect=bool(collect),
     )

@@ -25,6 +25,7 @@ import os
 
 import numpy as np
 
+from repro import obs
 from repro.coding.codec import pow2_bucket
 from repro.core.traces import DevicePools
 from repro.fleet.sweep import ChunkedVmapSweep, SweepCase, SweepResult, frontier_fold
@@ -86,13 +87,22 @@ class TaskqSweep(ChunkedVmapSweep):
             self.mesh_shape,
         )
 
-    def _build(self, key: tuple):
+    def _build(self, key: tuple, collect: bool = False):
         L, q_cap = key[2], key[3]
 
         def one(cfg, inter, idx, pools, sizes):
+            from repro import obs
             from repro.taskq.engine import taskq_scan_core
 
-            return taskq_scan_core(cfg, inter, idx, pools, sizes, L=L, q_cap=q_cap)
+            valid = obs.valid_mask(cfg, inter.shape[-1]) if collect else None
+            out = taskq_scan_core(cfg, inter, idx, pools, sizes, L=L,
+                                  q_cap=q_cap, collect=collect, valid=valid)
+            if collect:
+                # The scan-internal buf (cancellations, idle, backlog) rides
+                # with the generic per-case picks; disjoint names union-merge.
+                out["obs"] = out["obs"].merge(
+                    obs.sweep_point_metrics(out, "taskq", valid=valid))
+            return out
 
         # Pools and sizes broadcast: every grid row reads the one device copy.
         return self._vmapped(one, in_axes=(0, 0, 0, None, None))
@@ -171,6 +181,9 @@ class TaskqSweep(ChunkedVmapSweep):
 
         cfg = self._stack_cfg(cases, hk_len, hn_len)
         G = len(cases)
+        collect = obs.enabled()
+        if collect:
+            cfg["obs_count"] = np.full(G, count, np.int32)
 
         def chunk_streams(rows):
             inter = np.zeros((len(rows), T_b), np.float32)
@@ -184,7 +197,7 @@ class TaskqSweep(ChunkedVmapSweep):
                 idx[j, :count] = ix
             return inter, idx
 
-        fn = self._fn_for(key)
+        fn = self._fn_for(key, collect)
         fold = (
             frontier_fold(int(count * spec.warmup_frac), hn_len)
             if spec else None
@@ -203,6 +216,8 @@ class TaskqSweep(ChunkedVmapSweep):
             streamed=(
                 StreamedStats(spec.warmup_frac, count, stacked) if spec else None
             ),
+            metrics=self._last_metrics,
+            mesh_shape=self.mesh_shape,
         )
 
 
@@ -229,6 +244,7 @@ def write_taskq_artifact(
     points = frontier_points(result, warmup_frac)
     artifact = {
         "schema": "repro.taskq/BENCH_taskq/v1",
+        "meta": obs.run_meta(mesh_shape=getattr(result, "mesh_shape", ())),
         "grid_size": len(result.cases),
         "count": result.count,
         "compiles": result.compiles,

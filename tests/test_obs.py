@@ -1,0 +1,392 @@
+"""repro.obs: collection invariance (bit-identical primary outputs and
+pinned compile counts with telemetry on), device-folded histogram
+correctness against host recounts, exact taskq cancellation accounting,
+span-tree nesting + Chrome-trace JSON validity, the Prometheus formatter,
+the shared CompileStats registry, and the perf-gate comparison rules."""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import obs
+from repro.core import PAPER_READ_3MB, RequestClass
+from repro.core.traces import TraceStore
+from repro.fleet import FleetSweep, PolicySpec, grid_cases
+from repro.taskq import TaskqSweep
+
+CLS = RequestClass("read3mb", 3.0, PAPER_READ_3MB, k_max=6, r_max=2.0, n_max=12)
+L = 16
+SIZES = tuple(CLS.file_mb / k for k in range(1, CLS.k_max + 1))
+
+
+@pytest.fixture
+def obs_on():
+    obs.set_enabled(True)
+    obs.reset_trace()
+    yield
+    obs.set_enabled(None)
+    obs.reset_trace()
+
+
+@pytest.fixture
+def obs_off():
+    obs.set_enabled(False)
+    yield
+    obs.set_enabled(None)
+
+
+def _pools(seed=3, samples=512):
+    store = TraceStore.generate(
+        PAPER_READ_3MB, SIZES, threads=CLS.n_max, samples=samples,
+        correlation=0.0, seed=seed,
+    )
+    return store.device_pools(n_max=CLS.n_max)
+
+
+def _grid(n_seeds=2):
+    return grid_cases(
+        [10.0, 25.0], [PolicySpec.tofec(), PolicySpec.static(12, 6)],
+        list(range(n_seeds)), CLS, L,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MetricsBuf: host-visible semantics of the device folds
+# ---------------------------------------------------------------------------
+
+
+def test_metricsbuf_count_observe_high_snapshot():
+    buf = obs.MetricsBuf.zeros(counters=("c",), hists={"h": 4}, highs=("hi",))
+    buf = buf.count("c", 3).count("c")
+    buf = buf.observe("h", jnp.array([0, 1, 1, 9]))  # 9 clips to last bucket
+    buf = buf.observe("h", jnp.array([2, 2]), weight=jnp.array([1, 0]))
+    buf = buf.high("hi", jnp.array([1.5, 7.25, 0.0])).high("hi", 2.0)
+    snap = buf.snapshot()
+    assert snap["counters"]["c"] == 4
+    assert snap["hists"]["h"] == [1, 2, 1, 1]
+    assert snap["highs"]["hi"] == 7.25
+
+
+def test_metricsbuf_reduce_rows_drops_tail_padding():
+    buf = obs.MetricsBuf(
+        counters={"c": jnp.array([1, 2, 99], jnp.int32)},
+        hists={"h": jnp.array([[1, 0], [0, 1], [5, 5]], jnp.int32)},
+        highs={"hi": jnp.array([1.0, 3.0, 9.0], jnp.float32)},
+    )
+    snap = buf.reduce_rows(2).snapshot()
+    assert snap["counters"]["c"] == 3
+    assert snap["hists"]["h"] == [1, 1]
+    assert snap["highs"]["hi"] == 3.0
+
+
+def test_metricsbuf_merge_unions_disjoint_and_adds_shared():
+    a = obs.MetricsBuf.zeros(counters=("x",), highs=("hi",)).count("x", 2)
+    b = obs.MetricsBuf.zeros(counters=("x", "y"), highs=("hi",))
+    b = b.count("x", 5).count("y", 1).high("hi", 4.0)
+    snap = a.merge(b).snapshot()
+    assert snap["counters"] == {"x": 7, "y": 1}
+    assert snap["highs"]["hi"] == 4.0
+
+
+def test_prometheus_exposition_shape():
+    buf = obs.MetricsBuf.zeros(counters=("reqs",), hists={"q": 3}, highs=("q_hi",))
+    buf = buf.count("reqs", 2).observe("q", jnp.array([0, 2, 2])).high("q_hi", 2.0)
+    text = buf.to_prometheus(prefix="t")
+    assert "# TYPE t_reqs_total counter" in text
+    assert "t_reqs_total 2" in text
+    # cumulative buckets, +Inf tail, count line
+    assert 't_q_bucket{le="0"} 1' in text
+    assert 't_q_bucket{le="+Inf"} 3' in text
+    assert "t_q_count 3" in text
+    assert "t_q_hi 2.0" in text
+
+
+# ---------------------------------------------------------------------------
+# Sweep collection: invariance, padding masks, host recounts
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_collection_invariant_and_histograms_match_host_recount():
+    cases, count = _grid(), 300  # pads to a larger pow2 time bucket
+    try:
+        obs.set_enabled(False)
+        base = FleetSweep(chunk=4).run(cases, count)
+        obs.set_enabled(True)
+        res = FleetSweep(chunk=4).run(cases, count)
+    finally:
+        obs.set_enabled(None)
+    # Primary outputs are bit-identical with collection on.
+    for name in base.out:
+        np.testing.assert_array_equal(
+            np.asarray(base.out[name]), np.asarray(res.out[name]))
+    # Collection costs no extra compiles (the collect flag is in the key).
+    assert res.compiles == base.compiles
+    assert base.metrics is None and res.metrics is not None
+    snap = res.metrics.snapshot()
+    G = len(cases)
+    # Padded steps masked out: exact request/task tallies.
+    assert snap["counters"]["fleet_requests"] == G * count
+    ks = np.asarray(res.out["k"])[:, :count].astype(int)
+    ns = np.asarray(res.out["n"])[:, :count].astype(int)
+    assert snap["counters"]["fleet_tasks"] == int(ns.sum())
+    np.testing.assert_array_equal(
+        snap["hists"]["fleet_pick_k"],
+        np.bincount(ks.ravel(), minlength=obs.PICK_BINS))
+    np.testing.assert_array_equal(
+        snap["hists"]["fleet_pick_n"],
+        np.bincount(ns.ravel(), minlength=obs.PICK_BINS))
+    assert snap["highs"]["fleet_delay_hi"] == pytest.approx(
+        float(np.asarray(res.out["total"])[:, :count].max()), rel=1e-6)
+
+
+def test_taskq_collection_invariant_with_exact_cancellations(obs_on):
+    cases, count = _grid(n_seeds=1), 200
+    dp = _pools()
+    obs.set_enabled(False)
+    base = TaskqSweep(chunk=4).run(cases, count, dp)
+    obs.set_enabled(True)
+    res = TaskqSweep(chunk=4).run(cases, count, dp)
+    for name in base.out:
+        np.testing.assert_array_equal(
+            np.asarray(base.out[name]), np.asarray(res.out[name]))
+    assert res.compiles == base.compiles == 1
+    snap = res.metrics.snapshot()
+    G = len(cases)
+    assert snap["counters"]["taskq_requests"] == G * count
+    ns = np.asarray(res.out["n"])[:, :count].astype(int)
+    ks = np.asarray(res.out["k"])[:, :count].astype(int)
+    c = snap["counters"]
+    # Cancel RPCs split exactly into queued vs in-service; ties C == D
+    # complete with the request, so the total can undershoot Σ(n−k).
+    assert c["taskq_cancelled"] == c["taskq_cancel_queue"] + c["taskq_cancel_service"]
+    assert 0 < c["taskq_cancelled"] <= int((ns - ks).sum())
+    # Idle-thread histogram counts every real arrival once.
+    assert sum(snap["hists"]["taskq_idle"]) == G * count
+    assert len(snap["hists"]["taskq_idle"]) == L + 1
+    assert snap["highs"]["taskq_q_hi"] >= 0.0
+
+
+def test_taskq_scan_entry_point_collect_arg(obs_off):
+    from repro.taskq.engine import taskq_scan
+    from repro.taskq.policies import encode_policy
+
+    case = _grid(n_seeds=1)[0]
+    dp = _pools()
+    enc = encode_policy(PolicySpec.static(12, 6), CLS, L, CLS.k_max + 1,
+                        CLS.n_max + 1, None)
+    cfg = {"J": CLS.file_mb, "alpha": enc.alpha, "r_max": enc.r_max,
+           "pol": enc.pol, "gk_max": enc.gk_max, "h_k": enc.h_k,
+           "h_n": enc.h_n}
+    from repro.taskq import taskq_streams
+    inter, idx = taskq_streams(case, 64, dp.n_rows)
+    off = taskq_scan(cfg, inter, idx, dp.pools, dp.sizes_mb, L=L)
+    on = taskq_scan(cfg, inter, idx, dp.pools, dp.sizes_mb, L=L, collect=True)
+    assert "obs" not in off and "obs" in on
+    for name in off:
+        np.testing.assert_array_equal(np.asarray(off[name]), np.asarray(on[name]))
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop serving: device metrics ride the fused step
+# ---------------------------------------------------------------------------
+
+
+def _serve_tokens(rounds=2, steps=2):
+    import jax
+
+    from repro.coding.codec import Codec
+    from repro.coding.layout import SharedKeyLayout
+    from repro.core import FeedbackPolicy, StaticPolicy
+    from repro.models import get
+    from repro.serve import ClosedLoopServer, FusedServingStep, ServePolicy, ServingEngine
+    from repro.storage import MemoryStore, Proxy
+
+    arch = get("qwen1.5-0.5b", smoke=True)
+    params = arch.init(jax.random.key(2))
+    eng = ServingEngine(arch, params, max_seq=64)
+    prompt_len = 16
+    layout = SharedKeyLayout(K=4, r=2, strip_bytes=prompt_len)
+    store = MemoryStore()
+    rng = np.random.default_rng(6)
+    keys = []
+    for i in range(3):
+        toks = rng.integers(0, arch.cfg.vocab, size=(prompt_len,)).astype(np.int32)
+        ServingEngine.store_prompt(store, f"p/{i}", layout, toks)
+        keys.append(f"p/{i}")
+    proxy = Proxy(store, StaticPolicy(8, 4), L=8,
+                  write_policy=FeedbackPolicy(layout.N, layout.K))
+    step = FusedServingStep.for_policy(ServePolicy.tofec(), CLS, L,
+                                       codec=Codec("jnp"))
+    server = ClosedLoopServer(eng, proxy, layout, step, prompt_len=prompt_len)
+    try:
+        results = [server.serve_round(keys, steps=steps) for _ in range(rounds)]
+        return [np.asarray(r.tokens) for r in results], server
+    finally:
+        proxy.close()
+
+
+def test_closed_loop_metrics_invariant_and_exact(tmp_path):
+    obs.set_enabled(False)
+    try:
+        toks_off, server_off = _serve_tokens()
+    finally:
+        obs.set_enabled(None)
+    obs.set_enabled(True)
+    obs.reset_trace()
+    try:
+        toks_on, server_on = _serve_tokens()
+        # Generated tokens bit-identical with collection on; still one trace.
+        for a, b in zip(toks_off, toks_on):
+            np.testing.assert_array_equal(a, b)
+        assert server_on.traces == server_off.traces == 1
+        assert server_off.metrics is None
+        snap = server_on.metrics.snapshot()
+        c = snap["counters"]
+        assert c["serve_rounds"] == 2
+        assert c["serve_requested"] == 2 * 3
+        assert c["serve_served"] == 2 * 3
+        assert c["serve_decode_errors"] == 0
+        assert sum(snap["hists"]["serve_batch"]) == 2
+        assert sum(snap["hists"]["serve_pick_n"]) == 2
+        assert snap["highs"]["serve_q_hi"] >= 0.0
+        # The round's host spans export as a loadable Chrome trace.
+        names = {ev["name"] for ev in obs.get_tracer().events()}
+        assert {"serve.round", "serve.fetch", "serve.launch"} <= names
+        path = obs.write_trace(str(tmp_path / "serve_trace.json"))
+        doc = json.load(open(path))
+        assert any(ev["name"] == "serve.round" for ev in doc["traceEvents"])
+        # Prometheus exposition of the same snapshot is well-formed.
+        assert "repro_serve_rounds_total 2" in obs.to_prometheus(snap)
+    finally:
+        obs.set_enabled(None)
+        obs.reset_trace()
+
+
+# ---------------------------------------------------------------------------
+# Span tracing
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_and_chrome_trace_json(obs_on, tmp_path):
+    tr = obs.get_tracer()
+    with obs.span("outer", mesh=[1]):
+        with obs.span("inner", bucket="(4, 64)"):
+            pass
+        with obs.span("inner"):
+            pass
+    by_name: dict = {}
+    for ev in tr.events():  # spans record at exit: inner events come first
+        by_name.setdefault(ev["name"], []).append(ev)
+    (outer,), inners = by_name["outer"], by_name["inner"]
+    assert outer["args"]["depth"] == 0
+    assert outer["args"]["parent"] is None
+    assert all(ev["args"]["depth"] == 1 for ev in inners)
+    assert all(ev["args"]["parent"] == "outer" for ev in inners)
+    assert inners[0]["args"]["bucket"] == "(4, 64)"
+    # Chrome trace_event document: loads back, complete events, µs fields.
+    path = obs.write_trace(str(tmp_path / "trace.json"))
+    doc = json.load(open(path))
+    assert doc["displayTimeUnit"] == "ms"
+    assert len(doc["traceEvents"]) == 3
+    for ev in doc["traceEvents"]:
+        assert ev["ph"] == "X" and ev["dur"] >= 0 and "pid" in ev and "tid" in ev
+    agg = obs.aggregate()
+    assert agg["inner"]["count"] == 2
+    assert agg["outer"]["total_us"] >= agg["outer"]["max_us"]
+    assert "outer" in tr.format_table()
+
+
+def test_spans_disabled_record_nothing():
+    obs.set_enabled(False)
+    obs.reset_trace()
+    try:
+        with obs.span("never"):
+            pass
+        assert obs.get_tracer().events() == []
+    finally:
+        obs.set_enabled(None)
+
+
+def test_traced_decorator(obs_on):
+    calls = []
+
+    @obs.traced("deco.fn", tag=1)
+    def fn(x):
+        calls.append(x)
+        return x + 1
+
+    assert fn(1) == 2 and calls == [1]
+    ev = [e for e in obs.get_tracer().events() if e["name"] == "deco.fn"]
+    assert len(ev) == 1 and ev[0]["args"]["tag"] == 1
+
+
+def test_sweep_run_emits_spans(obs_on):
+    FleetSweep(chunk=4).run(_grid(n_seeds=1), 64)
+    names = {ev["name"] for ev in obs.get_tracer().events()}
+    assert {"sweep.chunk", "sweep.launch", "sweep.trace"} <= names
+
+
+# ---------------------------------------------------------------------------
+# Shared compile accounting + run metadata
+# ---------------------------------------------------------------------------
+
+
+def test_compile_stats_registry_and_aliases():
+    s = obs.CompileStats(label="test.engine")
+    s.traces += 2
+    s.launches += 5
+    snap = obs.compile_snapshot()
+    assert snap["test.engine"]["traces"] == 2
+    assert snap["test.engine"]["launches"] == 5
+    # Back-compat aliases still resolve to the shared class.
+    from repro.coding.codec import CodecStats
+    from repro.fleet.sweep import SweepStats
+    assert SweepStats is obs.CompileStats and CodecStats is obs.CompileStats
+
+
+def test_run_meta_fields():
+    meta = obs.run_meta(mesh_shape=(2, 4))
+    assert meta["schema_version"] == obs.SCHEMA_VERSION
+    assert meta["host_cores"] >= 1 and meta["host_devices"] >= 1
+    assert meta["mesh_shape"] == [2, 4]
+    rev = meta["git_rev"]
+    assert rev is None or (isinstance(rev, str) and len(rev) >= 7)
+
+
+# ---------------------------------------------------------------------------
+# Perf gate: comparison rules
+# ---------------------------------------------------------------------------
+
+
+def test_gate_rules(tmp_path):
+    from benchmarks import gate
+
+    art = {
+        "schema": "repro.fleet/BENCH_fleet/v1",
+        "grid_size": 8, "count": 256, "compiles": 1, "launches": 2,
+        "capacity_req_s": {"tofec": 30.0},
+        "headline": {"delay_gain_vs_basic": 2.5},
+    }
+    res_dir, base_dir = tmp_path / "res", tmp_path / "base"
+    res_dir.mkdir()
+    (res_dir / "BENCH_fleet.json").write_text(json.dumps(art))
+    # No baseline: passes with a note.
+    assert gate.check(str(res_dir), str(base_dir)) == 0
+    gate.update(str(res_dir), str(base_dir))
+    assert gate.check(str(res_dir), str(base_dir)) == 0
+    # Count drift fails exactly; stat drift fails past the tolerance.
+    bad = dict(art, compiles=2,
+               headline={"delay_gain_vs_basic": 2.5 * 1.2})
+    (res_dir / "BENCH_fleet.json").write_text(json.dumps(bad))
+    assert gate.check(str(res_dir), str(base_dir)) == 1
+    fails, warns, notes = gate.check_file(
+        str(res_dir / "BENCH_fleet.json"),
+        str(base_dir / "BENCH_fleet.json"))
+    assert len(fails) == 2 and not warns
+    # Within-tolerance stat drift passes.
+    ok = dict(art, headline={"delay_gain_vs_basic": 2.5 * 1.05})
+    (res_dir / "BENCH_fleet.json").write_text(json.dumps(ok))
+    assert gate.check(str(res_dir), str(base_dir)) == 0

@@ -85,6 +85,13 @@ def _serve_metrics(art: dict, metrics: dict) -> None:
                 rec.get("fused_req_per_s"), "wallclock", "req/s")
         _metric(metrics, f"batch{b}/speedup", rec.get("speedup"),
                 "wallclock", "x")
+    # Timeline/SLO block from the collected post-timing pass: the pick
+    # series ignores wallclock (threshold lane on a constant backlog
+    # signal), so the convergence round is structurally deterministic;
+    # dwell is a simulation statistic.
+    slo = art.get("slo") or {}
+    _metric(metrics, "slo/settle_round", slo.get("settle_round"), "count")
+    _metric(metrics, "slo/dwell_final", slo.get("dwell_final"), "stat")
 
 
 def _shard_metrics(art: dict, metrics: dict) -> None:

@@ -1,5 +1,5 @@
-"""Telemetry demo: the three repro.obs layers over one serving round and
-one exact task-level sweep.
+"""Telemetry demo: every repro.obs layer over one serving loop, one exact
+task-level sweep and two profiled kernels.
 
 Turns collection on (:func:`repro.obs.set_enabled` — the programmatic twin
 of ``REPRO_OBS=1``), runs a small closed-loop serve and a TaskqSweep grid,
@@ -8,6 +8,13 @@ then exports everything the layer produces:
 * the device-folded metrics snapshots (round/request counters, picked-(n,k)
   and idle-thread histograms, queue high-water marks) plus their Prometheus
   text exposition;
+* the per-round / per-window **timelines** (arrival rate, backlog, picks,
+  delay-histogram deltas) and the :func:`repro.obs.slo_report` judged over
+  them — burn rate, breach events, controller pick-settling;
+* the launch **profiler** table — XLA cost_analysis FLOPs/bytes vs measured
+  wallclock, roofline bound per compiled kernel;
+* the ASCII **dashboard** (sparkline timelines + SLO tiles) on stdout and
+  its self-contained HTML twin, plus the structured NDJSON event log;
 * the shared compile-accounting snapshot across every engine touched;
 * the host span table (compile/launch/fetch/finalize boundaries) and the
   Chrome ``trace_event`` JSON — load it in ``chrome://tracing`` / Perfetto.
@@ -21,6 +28,7 @@ import json
 import os
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
@@ -28,6 +36,9 @@ from repro.coding.codec import Codec
 from repro.coding.layout import SharedKeyLayout
 from repro.configs.qwen1_5_0_5b import CONFIG as QWEN
 from repro.core import PAPER_READ_3MB, FeedbackPolicy, RequestClass, StaticPolicy
+from repro.core.controller import TofecTables
+from repro.core.jax_sim import JaxSimParams, simulate_tofec_scan
+from repro.core.static_optimizer import build_class_plan
 from repro.core.traces import TraceStore
 from repro.fleet import PolicySpec, grid_cases
 from repro.models.registry import Arch, _FAMILY_MODULES
@@ -43,7 +54,7 @@ CFG = dataclasses.replace(
 )
 
 
-def serve_rounds(rounds: int, steps: int) -> dict:
+def serve_rounds(rounds: int, steps: int) -> tuple:
     arch = Arch(cfg=CFG, module=_FAMILY_MODULES["dense"])
     eng = ServingEngine(arch, arch.init(jax.random.key(0)), max_seq=64)
     prompt_len = 16
@@ -63,12 +74,12 @@ def serve_rounds(rounds: int, steps: int) -> dict:
     try:
         for _ in range(rounds):
             server.serve_round(keys, steps=steps)
-        return server.metrics.snapshot()
+        return server.metrics.snapshot(), server.timeline.snapshot()
     finally:
         proxy.close()
 
 
-def taskq_grid(count: int) -> dict:
+def taskq_grid(count: int) -> tuple:
     sizes = tuple(CLS.file_mb / k for k in range(1, CLS.k_max + 1))
     store = TraceStore.generate(PAPER_READ_3MB, sizes, threads=CLS.n_max,
                                 samples=1024, correlation=0.0, seed=3)
@@ -77,7 +88,26 @@ def taskq_grid(count: int) -> dict:
                        [0], CLS, L)
     res = TaskqSweep(chunk=4).run(cases, count,
                                   store.device_pools(n_max=CLS.n_max))
-    return res.metrics.snapshot()
+    return res.metrics.snapshot(), res.timeline.snapshot()
+
+
+def profile_kernels(count: int) -> None:
+    """Roofline-profile the fluid scan and the codec's decode GEMM shape."""
+    p = JaxSimParams.from_class(CLS, L)
+    tables = TofecTables.from_plan(build_class_plan(CLS, L))
+    rng = np.random.default_rng(0)
+    inter = jnp.asarray(rng.exponential(1.0 / 25.0, size=count), jnp.float32)
+    exps = jnp.asarray(rng.exponential(1.0, size=(count, CLS.n_max)), jnp.float32)
+    # Close over the static params: AOT-compiled callables take only the
+    # array arguments, so profile a fully-array-signature wrapper.
+    scan = jax.jit(lambda i, e: simulate_tofec_scan(p, tables, i, e))
+    obs.profile_launch("tofec_scan", scan, inter, exps)
+
+    # The MDS decode inner product at a serving-sized shape: (k × n) decode
+    # matrix against n coded strips of 4 KB.
+    G = jnp.asarray(rng.standard_normal((CLS.k_max, CLS.n_max)), jnp.float32)
+    shards = jnp.asarray(rng.standard_normal((CLS.n_max, 4096)), jnp.float32)
+    obs.profile_launch("decode_matmul", jax.jit(lambda a, b: a @ b), G, shards)
 
 
 def main() -> None:
@@ -89,21 +119,34 @@ def main() -> None:
 
     obs.set_enabled(True)
     obs.reset_trace()
+    obs.reset_profiles()
 
-    serve_snap = serve_rounds(rounds=2 if args.fast else 4,
-                              steps=2 if args.fast else 4)
-    taskq_snap = taskq_grid(count=128 if args.fast else 512)
+    serve_snap, serve_tl = serve_rounds(rounds=2 if args.fast else 4,
+                                        steps=2 if args.fast else 4)
+    taskq_snap, taskq_tl = taskq_grid(count=128 if args.fast else 512)
+    profile_kernels(count=128 if args.fast else 1024)
+
+    spec = obs.SLOSpec(target_s=0.25, percentile=0.99, window=4)
+    events = obs.EventLog("obs_demo")
+    report = obs.slo_report(serve_tl, spec, label="obs_demo", events=events)
+    profile = obs.profile_snapshot()
 
     print("== serving metrics ==")
-    print(obs.to_prometheus(serve_snap, prefix="repro"))
+    print(obs.to_prometheus(serve_snap, prefix="repro",
+                            labels={"run": "obs_demo", "plane": "serve"}))
     print("== taskq metrics ==")
-    print(obs.to_prometheus(taskq_snap, prefix="repro"))
+    print(obs.to_prometheus(taskq_snap, prefix="repro",
+                            labels={"run": "obs_demo", "plane": "taskq"}))
 
     print("== compile accounting ==")
     for label, row in obs.compile_snapshot().items():
         print(f"  {label}: traces={row['traces']} launches={row['launches']}")
 
-    print("\n== span table ==")
+    print("\n== dashboard ==")
+    print(obs.ascii_dashboard({"serve": serve_tl, "taskq": taskq_tl},
+                              slo=report, profile=profile))
+
+    print("== span table ==")
     print(obs.get_tracer().format_table())
 
     out_dir = os.path.abspath(args.out)
@@ -113,9 +156,18 @@ def main() -> None:
     with open(snap_path, "w") as f:
         json.dump({"meta": obs.run_meta(), "serve": serve_snap,
                    "taskq": taskq_snap,
+                   "slo": {k: v for k, v in report.items() if k != "events"},
+                   "profile": profile,
                    "compile": obs.compile_snapshot()}, f, indent=1)
+    dash_path = obs.html_report(
+        os.path.join(out_dir, "obs_dashboard.html"),
+        {"serve": serve_tl, "taskq": taskq_tl}, slo=report, profile=profile,
+        meta={"run": "obs_demo", "fast": bool(args.fast)})
+    events_path = events.write(os.path.join(out_dir, "obs_events.ndjson"))
     print(f"\nwrote {trace_path}")
     print(f"wrote {snap_path}")
+    print(f"wrote {dash_path}")
+    print(f"wrote {events_path}")
 
 
 if __name__ == "__main__":

@@ -49,6 +49,16 @@ def _usage(p: JaxSimParams, k, r):
     return p.delta_bar * k * r + p.delta_tilde * p.J * r + p.psi_bar * k + p.psi_tilde * p.J
 
 
+def backlog_proxy(p, queueing):
+    """Queue-length proxy series from the scan's queueing-delay output.
+
+    The scan observes backlog as ``w · L / ū(1,1)`` and reports ``d_q = w``,
+    so the controller's exact per-arrival backlog is recoverable post-hoc
+    with the same float32 ops — this is what the timeline layer records
+    without touching the scan carry."""
+    return queueing * p.L / _usage(p, 1.0, 1.0)
+
+
 def _service_delay(p, k, n, exps, n_max: int):
     """Δ(B) + (1/μ(B)) Σ_{j<k} E_j/(n−j); exps: (n_max,) Exp(1) draws."""
     B = p.J / k

@@ -29,6 +29,15 @@ reductions are invariant to the leading batch size), the streamed
 statistics are bit-exact equals of the materialized ones;
 ``frontier_points`` / ``convergence_stats`` / ``multiclass_points`` and the
 artifact writers consume a streamed result through the same API.
+
+The observability side-channels ride both capabilities unchanged: per-case
+:class:`repro.obs.MetricsBuf` rows fold per chunk (cut → row-reduce →
+merge) while per-case :class:`repro.obs.TimelineBuf` timelines keep their
+case axis (cut → concat).  Both are per-slot/per-case reductions —
+invariant to the leading batch size and to where the grid axis is split —
+so streamed and mesh-sharded runs carry metrics AND timelines bit-exactly
+equal to the materialized single-device path (asserted in
+``tests/test_obs.py`` / ``tests/test_shard.py``).
 """
 
 from __future__ import annotations

@@ -266,6 +266,7 @@ class ChunkedVmapSweep:
         self._fns: dict[tuple, object] = {}
         self._plans: dict[tuple, ClassPlan] = {}
         self._last_metrics = None  # MetricsBuf of the most recent run, if collected
+        self._last_timeline = None  # per-case TimelineBuf of the most recent run
 
     @property
     def mesh_shape(self) -> tuple:
@@ -366,6 +367,7 @@ class ChunkedVmapSweep:
 
         outs = []
         mbuf = None
+        tlbuf = None
         engine = type(self).__name__
         mesh_tag = str(self.mesh_shape)
         bcast = tuple(jnp.asarray(b) for b in broadcast)
@@ -402,6 +404,13 @@ class ChunkedVmapSweep:
                 if mb is not None:
                     mb = mb.reduce_rows(hi - lo)
                     mbuf = mb if mbuf is None else mbuf.merge(mb)
+                # Timelines stay per case: cut the tail padding, then
+                # concatenate chunks along the case axis (leading-batch
+                # invariant, so streamed/sharded runs carry them bit-exactly).
+                tl = out.pop("timeline", None)
+                if tl is not None:
+                    tl = tl.reduce_rows(hi - lo)
+                    tlbuf = tl if tlbuf is None else tlbuf.concat(tl)
                 if fold is None:
                     outs.append(
                         {name: v[: hi - lo, :count] for name, v in out.items()})
@@ -412,6 +421,7 @@ class ChunkedVmapSweep:
                     outs.append({name: v[: hi - lo] for name, v in red.items()})
         self.stats.cases += G
         self._last_metrics = mbuf
+        self._last_timeline = tlbuf
         return {
             name: jnp.concatenate([o[name] for o in outs], axis=0)
             for name in outs[0]
@@ -468,6 +478,7 @@ class SweepResult:
     launches: int
     streamed: object = None  # StreamedStats for streamed runs
     metrics: object = None  # MetricsBuf folded across chunks (REPRO_OBS=1)
+    timeline: object = None  # per-case TimelineBuf, (G, S) slots (REPRO_OBS=1)
     mesh_shape: tuple = ()  # device-mesh shape the run launched on
 
     def to_numpy(self) -> dict[str, np.ndarray]:
@@ -480,21 +491,29 @@ class FleetSweep(ChunkedVmapSweep):
     # -- compilation cache --------------------------------------------------
 
     def bucket_key(self, n_cases: int, count: int, n_max: int, hk_len: int, hn_len: int):
-        """The compilation-cache key a run with these shapes lands in."""
+        """The compilation-cache key a run with these shapes lands in.
+
+        The trailing timeline window is derived from the pow2 time bucket
+        (see :func:`repro.obs.timeline_window`), so listing it explicitly
+        never splits a bucket — it documents the slotting each compilation
+        traces with."""
+        t_b = pow2_bucket(count, self.t_floor)
         return (
             self._chunk_bucket(n_cases),
-            pow2_bucket(count, self.t_floor),
+            t_b,
             n_max,
             hk_len,
             hn_len,
             self.mesh_shape,
+            obs.timeline_window(t_b),
         )
 
     def _build(self, key: tuple, collect: bool = False):
         n_max = key[2]
+        window = key[-1]
 
         def one(cfg, inter, exps):
-            from repro.core.jax_sim import tofec_scan_core
+            from repro.core.jax_sim import backlog_proxy, tofec_scan_core
 
             p = types.SimpleNamespace(
                 delta_bar=cfg["delta_bar"], delta_tilde=cfg["delta_tilde"],
@@ -506,8 +525,11 @@ class FleetSweep(ChunkedVmapSweep):
             )
             if collect:
                 out = dict(out)
-                out["obs"] = obs.sweep_point_metrics(
-                    out, "fleet", valid=obs.valid_mask(cfg, inter.shape[-1]))
+                valid = obs.valid_mask(cfg, inter.shape[-1])
+                out["obs"] = obs.sweep_point_metrics(out, "fleet", valid=valid)
+                out["timeline"] = obs.sweep_timeline(
+                    out, inter, window=window, valid=valid,
+                    backlog=backlog_proxy(p, out["queueing"]))
             return out
 
         return self._vmapped(one, in_axes=(0, 0, 0))
@@ -612,5 +634,6 @@ class FleetSweep(ChunkedVmapSweep):
                 StreamedStats(spec.warmup_frac, count, stacked) if spec else None
             ),
             metrics=self._last_metrics,
+            timeline=self._last_timeline,
             mesh_shape=self.mesh_shape,
         )

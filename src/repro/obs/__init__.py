@@ -1,14 +1,24 @@
 """repro.obs — unified telemetry across the serving tower and sweep engines.
 
-Three layers (see ROADMAP "Conventions"):
+Layers (see ROADMAP "Conventions"):
 
 * device-resident metrics — :class:`MetricsBuf` pytrees threaded through
   the jitted hot paths and folded per chunk (no host syncs);
+* time-resolved timelines — :class:`TimelineBuf` ring/windowed pytrees of
+  per-round / per-window series (arrival rate, backlog, pick, served) and
+  delay-histogram deltas; windowed percentiles are recoverable host-side;
+* SLO / convergence monitoring — :class:`SLOSpec` burn rates and
+  pick-settling over timeline snapshots, with structured NDJSON events
+  (:class:`EventLog`) mirrored into the span trace as instant marks;
 * host span tracing — :func:`span` / :func:`traced` around compile /
   launch / upload / finalize boundaries, exported as Chrome trace JSON via
   :func:`write_trace` and aggregate tables via :func:`aggregate`;
 * shared compile accounting — :class:`CompileStats` behind every engine's
-  ``stats`` object, queryable in one shot via :func:`compile_snapshot`.
+  ``stats`` object, queryable in one shot via :func:`compile_snapshot`;
+* launch profiling — :func:`profile_launch` cost-model + wallclock records
+  registered into the same compile registry;
+* dashboards — :func:`ascii_dashboard` / :func:`html_report` over the
+  timeline snapshots, SLO reports, and profiler tables.
 
 Everything is gated on ``REPRO_OBS=1`` (or :func:`set_enabled`); disabled,
 the layer costs one branch per site and changes no compiled graph.
@@ -22,10 +32,35 @@ from repro.obs.metrics import (
     to_prometheus,
     valid_mask,
 )
+from repro.obs.timeline import (
+    DELAY_BINS,
+    TIMELINE_SLOTS,
+    TimelineBuf,
+    delay_bucket,
+    hist_percentile,
+    rolling_percentile,
+    sweep_timeline,
+    timeline_window,
+)
+from repro.obs.slo import (
+    EventLog,
+    SLOSpec,
+    burn_rate,
+    convergence,
+    slo_report,
+)
+from repro.obs.profile import (
+    format_profile,
+    profile_launch,
+    profile_snapshot,
+    reset_profiles,
+)
+from repro.obs.dashboard import ascii_dashboard, html_report, sparkline
 from repro.obs.trace import (
     Tracer,
     aggregate,
     get_tracer,
+    instant,
     reset_trace,
     span,
     traced,
@@ -44,9 +79,30 @@ __all__ = [
     "sweep_point_metrics",
     "valid_mask",
     "to_prometheus",
+    "TimelineBuf",
+    "TIMELINE_SLOTS",
+    "DELAY_BINS",
+    "delay_bucket",
+    "hist_percentile",
+    "rolling_percentile",
+    "sweep_timeline",
+    "timeline_window",
+    "SLOSpec",
+    "EventLog",
+    "burn_rate",
+    "convergence",
+    "slo_report",
+    "profile_launch",
+    "profile_snapshot",
+    "format_profile",
+    "reset_profiles",
+    "ascii_dashboard",
+    "html_report",
+    "sparkline",
     "Tracer",
     "span",
     "traced",
+    "instant",
     "get_tracer",
     "write_trace",
     "aggregate",

@@ -112,34 +112,59 @@ class MetricsBuf:
             "highs": {n: float(np.asarray(v)) for n, v in self.highs.items()},
         }
 
-    def to_prometheus(self, prefix: str = "repro") -> str:
-        return to_prometheus(self.snapshot(), prefix=prefix)
+    def to_prometheus(self, prefix: str = "repro",
+                      labels: dict | None = None) -> str:
+        return to_prometheus(self.snapshot(), prefix=prefix, labels=labels)
 
 
-def to_prometheus(snap: dict, prefix: str = "repro") -> str:
+def _escape_label_value(v) -> str:
+    """Prometheus exposition-format label-value escaping (backslash first)."""
+    return (
+        str(v).replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+    )
+
+
+def _label_str(labels: dict | None, extra: str = "") -> str:
+    parts = [f'{k}="{_escape_label_value(v)}"'
+             for k, v in sorted((labels or {}).items())]
+    if extra:
+        parts.append(extra)
+    return "{" + ",".join(parts) + "}" if parts else ""
+
+
+def to_prometheus(snap: dict, prefix: str = "repro",
+                  labels: dict | None = None) -> str:
     """Prometheus-style text exposition of a :meth:`MetricsBuf.snapshot`.
 
-    Histogram buckets are unit-width (`le="i"` covers values <= i); the last
-    bucket is `+Inf` (clipped tail), so cumulative counts are monotone.
+    Each metric family carries its ``# HELP`` / ``# TYPE`` header lines.
+    ``labels`` (e.g. ``{"engine": "fleet"}``) are attached to every sample
+    with exposition-format value escaping.  Histogram buckets are
+    unit-width (`le="i"` covers values <= i); the last bucket is `+Inf`
+    (clipped tail), so cumulative counts are monotone.
     """
     lines = []
+    base = _label_str(labels)
     for n, v in sorted(snap.get("counters", {}).items()):
         name = f"{prefix}_{n}_total"
+        lines.append(f"# HELP {name} Running count of '{n}'.")
         lines.append(f"# TYPE {name} counter")
-        lines.append(f"{name} {v}")
+        lines.append(f"{name}{base} {v}")
     for n, buckets in sorted(snap.get("hists", {}).items()):
         name = f"{prefix}_{n}"
+        lines.append(f"# HELP {name} Fixed-bucket histogram of '{n}'.")
         lines.append(f"# TYPE {name} histogram")
         cum = 0
         for i, c in enumerate(buckets):
             cum += int(c)
             le = "+Inf" if i == len(buckets) - 1 else str(i)
-            lines.append(f'{name}_bucket{{le="{le}"}} {cum}')
-        lines.append(f"{name}_count {cum}")
+            le_labels = _label_str(labels, 'le="%s"' % le)
+            lines.append(f"{name}_bucket{le_labels} {cum}")
+        lines.append(f"{name}_count{base} {cum}")
     for n, v in sorted(snap.get("highs", {}).items()):
         name = f"{prefix}_{n}"
+        lines.append(f"# HELP {name} High-water mark of '{n}'.")
         lines.append(f"# TYPE {name} gauge")
-        lines.append(f"{name} {v}")
+        lines.append(f"{name}{base} {v}")
     return "\n".join(lines) + "\n"
 
 

@@ -19,6 +19,7 @@ import json
 import os
 import threading
 import time
+import warnings
 
 from repro.obs.state import enabled
 
@@ -29,6 +30,9 @@ class Tracer:
         self._events: list = []
         self._tls = threading.local()
         self._epoch = time.monotonic()
+        #: Spans entered but not yet exited; write_trace() auto-closes them.
+        self._open: dict = {}
+        self._warned_incomplete = False
 
     # ---- recording --------------------------------------------------------
     def _stack(self) -> list:
@@ -56,6 +60,25 @@ class Tracer:
 
         return deco
 
+    def instant(self, name: str, **tags) -> None:
+        """Record a zero-duration instant mark (Chrome "i" phase event) —
+        used for SLO breach / convergence events so they line up with the
+        compile/launch spans on the same timeline.  No-op when disabled."""
+        if not enabled():
+            return
+        ev = {
+            "name": name,
+            "ph": "i",
+            "cat": "repro",
+            "s": "t",
+            "ts": round((time.monotonic() - self._epoch) * 1e6, 3),
+            "pid": os.getpid(),
+            "tid": threading.get_ident() % 2**31,
+            "args": tags,
+        }
+        with self._lock:
+            self._events.append(ev)
+
     def _record(self, name, t0, t1, depth, parent, tags) -> None:
         ev = {
             "name": name,
@@ -76,9 +99,13 @@ class Tracer:
             return list(self._events)
 
     def aggregate(self) -> dict:
-        """Per-span-name {count, total_us, mean_us, max_us}, by total desc."""
+        """Per-span-name {count, total_us, mean_us, max_us}, by total desc.
+
+        Instant marks (:meth:`instant`) carry no duration and are skipped."""
         agg: dict = {}
         for ev in self.events():
+            if "dur" not in ev:
+                continue
             a = agg.setdefault(ev["name"], {"count": 0, "total_us": 0.0, "max_us": 0.0})
             a["count"] += 1
             a["total_us"] += ev["dur"]
@@ -104,8 +131,33 @@ class Tracer:
             "  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip() for r in rows
         )
 
+    def _close_incomplete(self) -> None:
+        """Auto-close spans still open (entered, never exited) as complete
+        events tagged ``incomplete: true``, warning once.  The span's later
+        real ``__exit__`` (if any) still pops the thread stack but won't
+        record a second event."""
+        with self._lock:
+            stuck = list(self._open.values())
+            self._open.clear()
+        if not stuck:
+            return
+        if not self._warned_incomplete:
+            self._warned_incomplete = True
+            warnings.warn(
+                f"{len(stuck)} span(s) left unclosed at write_trace(); "
+                "auto-closing with incomplete=true "
+                f"({', '.join(sorted({s.name for s in stuck}))})",
+                RuntimeWarning,
+                stacklevel=3,
+            )
+        t1 = time.monotonic()
+        for sp in stuck:
+            self._record(sp.name, sp._t0, t1, sp._depth, sp._parent,
+                         {**sp.tags, "incomplete": True})
+
     def write_trace(self, path: str) -> str:
         """Write Chrome trace_event JSON; returns the path."""
+        self._close_incomplete()
         doc = {"traceEvents": self.events(), "displayTimeUnit": "ms"}
         with open(path, "w") as fh:
             json.dump(doc, fh)
@@ -114,6 +166,8 @@ class Tracer:
     def reset(self) -> None:
         with self._lock:
             self._events.clear()
+            self._open.clear()
+            self._warned_incomplete = False
 
 
 class _Span:
@@ -133,13 +187,20 @@ class _Span:
         self._depth = len(st)
         st.append(self.name)
         self._t0 = time.monotonic()
+        with self._tracer._lock:
+            self._tracer._open[id(self)] = self
         return self
 
     def __exit__(self, *exc) -> bool:
         if self._on:
             t1 = time.monotonic()
             self._tracer._stack().pop()
-            self._tracer._record(self.name, self._t0, t1, self._depth, self._parent, self.tags)
+            with self._tracer._lock:
+                live = self._tracer._open.pop(id(self), None) is not None
+            if live:  # not already auto-closed by write_trace()
+                self._tracer._record(
+                    self.name, self._t0, t1, self._depth, self._parent, self.tags
+                )
         return False
 
 
@@ -152,6 +213,10 @@ def get_tracer() -> Tracer:
 
 def span(name: str, **tags) -> _Span:
     return _TRACER.span(name, **tags)
+
+
+def instant(name: str, **tags) -> None:
+    return _TRACER.instant(name, **tags)
 
 
 def traced(name: str | None = None, **tags):

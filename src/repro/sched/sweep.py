@@ -167,6 +167,7 @@ class SchedResult:
     launches: int
     streamed: object = None  # StreamedStats for streamed runs
     metrics: object = None  # MetricsBuf folded across chunks (REPRO_OBS=1)
+    timeline: object = None  # per-case TimelineBuf, (G, S) slots (REPRO_OBS=1)
     mesh_shape: tuple = ()  # device-mesh shape the run launched on
 
     def to_numpy(self) -> dict[str, np.ndarray]:
@@ -187,19 +188,26 @@ class SchedSweep(ChunkedVmapSweep):
 
     def bucket_key(self, n_cases: int, count: int, C: int, n_max: int,
                    hk_len: int, hn_len: int):
-        """The compilation-cache key a run with these shapes lands in."""
+        """The compilation-cache key a run with these shapes lands in.
+
+        The trailing timeline window derives from the pow2 time bucket
+        (:func:`repro.obs.timeline_window`), so listing it never splits a
+        bucket."""
+        t_b = pow2_bucket(count, self.t_floor)
         return (
             self._chunk_bucket(n_cases),
-            pow2_bucket(count, self.t_floor),
+            t_b,
             C,
             n_max,
             hk_len,
             hn_len,
             self.mesh_shape,
+            obs.timeline_window(t_b),
         )
 
     def _build(self, key: tuple, collect: bool = False):
         n_max = key[3]
+        window = key[-1]
 
         def one(cfg, inter, cls_ids, exps):
             from repro import obs
@@ -216,8 +224,13 @@ class SchedSweep(ChunkedVmapSweep):
             )
             if collect:
                 out = dict(out)
-                out["obs"] = obs.sweep_point_metrics(
-                    out, "sched", valid=obs.valid_mask(cfg, inter.shape[-1]))
+                valid = obs.valid_mask(cfg, inter.shape[-1])
+                out["obs"] = obs.sweep_point_metrics(out, "sched", valid=valid)
+                # The joint scan does not expose a single-queue backlog (the
+                # pool is shared across classes), so the sched timeline
+                # carries rate/pick/delay series only.
+                out["timeline"] = obs.sweep_timeline(
+                    out, inter, window=window, valid=valid)
             return out
 
         return self._vmapped(one, in_axes=(0, 0, 0, 0))
@@ -340,5 +353,6 @@ class SchedSweep(ChunkedVmapSweep):
                 StreamedStats(spec.warmup_frac, count, stacked) if spec else None
             ),
             metrics=self._last_metrics,
+            timeline=self._last_timeline,
             mesh_shape=self.mesh_shape,
         )

@@ -555,6 +555,7 @@ class ClosedLoopServer:
         self._lock = threading.Lock()
         self._last_now: float | None = None
         self._mbuf = None  # device MetricsBuf, created on first collected round
+        self._tlbuf = None  # device TimelineBuf ring, same lifecycle as _mbuf
 
     @property
     def traces(self) -> int:
@@ -570,6 +571,17 @@ class ClosedLoopServer:
         across collected rounds (None until a round runs with REPRO_OBS=1).
         Call ``.snapshot()`` on it for plain dicts — the only host sync."""
         return self._mbuf
+
+    @property
+    def timeline(self):
+        """The device-resident :class:`repro.obs.TimelineBuf` ring of
+        per-round samples — arrival rate ``lam``, ``backlog`` signal, the
+        controller's ``pick_n``/``pick_k``, ``served`` count, and the
+        round's ``delay`` histogram delta (windowed percentiles recoverable
+        host-side).  None until a round runs with REPRO_OBS=1; the last
+        :data:`_TL_CAP` rounds are retained.  Call ``.snapshot()`` for
+        oldest-first numpy series — the only host sync."""
+        return self._tlbuf
 
     def put(self, key: str, payload: bytes, cls_id: int = 0):
         """Queue a write through the proxy (encodes under the fed-back code
@@ -602,10 +614,10 @@ class ClosedLoopServer:
         if collect:
 
             def fused(tables, carry, mats, rows, q, dt, params,
-                      mbuf, requested, served, errs):
+                      mbuf, requested, served, errs, tlbuf, delays):
                 carry, n_nxt, k_nxt, toks, logits, cache = core(
                     tables, carry, mats, rows, q, dt, params)
-                # Pure additions on the side buf: the primary outputs'
+                # Pure additions on the side bufs: the primary outputs'
                 # graph is identical to the collect=False trace.
                 mbuf = (mbuf.count("serve_rounds", 1)
                             .count("serve_requested", requested)
@@ -616,7 +628,22 @@ class ClosedLoopServer:
                             .observe("serve_pick_k", k_nxt)
                             .observe("serve_batch", served)
                             .high("serve_q_hi", q))
-                return carry, n_nxt, k_nxt, toks, logits, cache, mbuf
+                # One timeline ring slot per round.  ``delays`` is padded to
+                # the bucket batch (its length is already in the cache key);
+                # the lane mask drops the padding from the histogram delta.
+                lam = jnp.where(
+                    dt > 0,
+                    served.astype(jnp.float32) / jnp.maximum(dt, 1e-9),
+                    0.0,
+                )
+                lane = jnp.arange(delays.shape[0])
+                wvec = (lane < served).astype(jnp.int32)
+                tlbuf = tlbuf.append(
+                    {"lam": lam, "backlog": q, "pick_n": n_nxt,
+                     "pick_k": k_nxt, "served": served},
+                    {"delay": (obs.delay_bucket(delays), wvec)},
+                )
+                return carry, n_nxt, k_nxt, toks, logits, cache, mbuf, tlbuf
 
         else:
             fused = core
@@ -631,6 +658,12 @@ class ClosedLoopServer:
     #: never changes the pytree structure (-> no retrace).
     _Q_BINS = 64
 
+    #: Timeline ring capacity: the last _TL_CAP rounds stay resident;
+    #: older slots are overwritten in ring order (snapshot restores
+    #: oldest-first).  Capacity is static pytree structure, so it never
+    #: varies the trace.
+    _TL_CAP = 256
+
     def _zero_mbuf(self):
         return obs.MetricsBuf.zeros(
             counters=("serve_rounds", "serve_requested", "serve_served",
@@ -639,6 +672,13 @@ class ClosedLoopServer:
                    "serve_pick_n": obs.PICK_BINS,
                    "serve_pick_k": obs.PICK_BINS},
             highs=("serve_q_hi",),
+        )
+
+    def _zero_tlbuf(self):
+        return obs.TimelineBuf.zeros(
+            self._TL_CAP,
+            series=("lam", "backlog", "pick_n", "pick_k", "served"),
+            hists={"delay": obs.DELAY_BINS},
         )
 
     def serve_round(self, keys: list[str], *, steps: int,
@@ -682,11 +722,19 @@ class ClosedLoopServer:
             if collect:
                 if self._mbuf is None:
                     self._mbuf = self._zero_mbuf()
+                if self._tlbuf is None:
+                    self._tlbuf = self._zero_tlbuf()
                 # Host-known round tallies ride as runtime scalars; the
                 # error count is the per-item mask's failed-fetch tally.
-                carry, n_nxt, k_nxt, _toks, logits, cache, self._mbuf = fn(
+                # Per-item proxy delays pad to the bucket batch (rows_p's
+                # leading axis, already in the cache key).
+                delays = np.zeros(rows_p.shape[0], np.float32)
+                delays[: len(good)] = [r.total_s for r in good]
+                (carry, n_nxt, k_nxt, _toks, logits, cache,
+                 self._mbuf, self._tlbuf) = fn(
                     *args, self._mbuf, jnp.int32(len(keys)),
                     jnp.int32(len(good)), jnp.int32(len(keys) - len(good)),
+                    self._tlbuf, jnp.asarray(delays),
                 )
             else:
                 carry, n_nxt, k_nxt, _toks, logits, cache = fn(*args)

@@ -72,6 +72,7 @@ def taskq_scan_core(
     q_cap: int = 128,
     collect: bool = False,
     valid: jax.Array | None = None,
+    window: int | None = None,
 ) -> dict[str, jax.Array]:
     """Traceable single-point engine body shared by the jitted entry point
     and :class:`repro.taskq.sweep.TaskqSweep`.
@@ -97,8 +98,11 @@ def taskq_scan_core(
     backlog length — and reduces them on device into an ``"obs"``
     :class:`repro.obs.MetricsBuf` entry (idle histogram, cancellation
     counters, backlog high-water mark). ``valid`` is an optional (T,) mask
-    of real arrivals so bucket-padded launches don't count padding. The
-    primary outputs' graph is untouched either way.
+    of real arrivals so bucket-padded launches don't count padding.
+    ``window`` (static, collect only) additionally emits a ``"timeline"``
+    :class:`repro.obs.TimelineBuf` of per-window series — here the backlog
+    series is the scan's *exact* per-arrival queue length. The primary
+    outputs' graph is untouched either way.
     """
     W = pools.shape[2]
     n_cap = W
@@ -208,16 +212,22 @@ def taskq_scan_core(
         buf = buf.observe("taskq_idle", idle_t, weight=w)
         buf = buf.high("taskq_q_hi", jnp.where(valid, q_t, 0.0))
         out["obs"] = buf
+        if window:
+            out["timeline"] = obs.sweep_timeline(
+                out, interarrivals, window=window, valid=valid, backlog=q_t)
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("L", "q_cap", "collect"))
+@functools.partial(
+    jax.jit, static_argnames=("L", "q_cap", "collect", "window")
+)
 def _taskq_scan_jit(
-    cfg, interarrivals, pool_idx, pools, pool_sizes, *, L, q_cap, collect
+    cfg, interarrivals, pool_idx, pools, pool_sizes, *, L, q_cap, collect,
+    window,
 ):
     return taskq_scan_core(
         cfg, interarrivals, pool_idx, pools, pool_sizes,
-        L=L, q_cap=q_cap, collect=collect,
+        L=L, q_cap=q_cap, collect=collect, window=window,
     )
 
 
@@ -231,14 +241,16 @@ def taskq_scan(
     L: int,
     q_cap: int = 128,
     collect: bool | None = None,
+    window: int | None = None,
 ) -> dict[str, jax.Array]:
     """Jitted single-grid-point entry point (the serial-scan baseline of
     ``benchmarks.kernel_bench.bench_taskq_engine``). ``collect`` defaults
-    to the ``REPRO_OBS`` gate; it is a static jit arg, so a constant
-    setting keeps compile counts at their pinned values."""
+    to the ``REPRO_OBS`` gate; it and ``window`` are static jit args, so a
+    constant setting keeps compile counts at their pinned values."""
     if collect is None:
         collect = obs.enabled()
     return _taskq_scan_jit(
         cfg, interarrivals, pool_idx, pools, pool_sizes,
         L=L, q_cap=q_cap, collect=bool(collect),
+        window=int(window) if window else None,
     )

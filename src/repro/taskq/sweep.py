@@ -75,20 +75,27 @@ class TaskqSweep(ChunkedVmapSweep):
 
     def bucket_key(self, n_cases: int, count: int, L: int, hk_len: int,
                    hn_len: int, pool_shape: tuple):
-        """The compilation-cache key a run with these shapes lands in."""
+        """The compilation-cache key a run with these shapes lands in.
+
+        The trailing timeline window derives from the pow2 time bucket
+        (:func:`repro.obs.timeline_window`), so listing it never splits a
+        bucket."""
+        t_b = pow2_bucket(count, self.t_floor)
         return (
             self._chunk_bucket(n_cases),
-            pow2_bucket(count, self.t_floor),
+            t_b,
             L,
             self.q_cap,
             hk_len,
             hn_len,
             tuple(pool_shape),
             self.mesh_shape,
+            obs.timeline_window(t_b),
         )
 
     def _build(self, key: tuple, collect: bool = False):
         L, q_cap = key[2], key[3]
+        window = key[-1]
 
         def one(cfg, inter, idx, pools, sizes):
             from repro import obs
@@ -96,7 +103,8 @@ class TaskqSweep(ChunkedVmapSweep):
 
             valid = obs.valid_mask(cfg, inter.shape[-1]) if collect else None
             out = taskq_scan_core(cfg, inter, idx, pools, sizes, L=L,
-                                  q_cap=q_cap, collect=collect, valid=valid)
+                                  q_cap=q_cap, collect=collect, valid=valid,
+                                  window=window if collect else None)
             if collect:
                 # The scan-internal buf (cancellations, idle, backlog) rides
                 # with the generic per-case picks; disjoint names union-merge.
@@ -217,6 +225,7 @@ class TaskqSweep(ChunkedVmapSweep):
                 StreamedStats(spec.warmup_frac, count, stacked) if spec else None
             ),
             metrics=self._last_metrics,
+            timeline=self._last_timeline,
             mesh_shape=self.mesh_shape,
         )
 

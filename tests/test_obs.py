@@ -390,3 +390,371 @@ def test_gate_rules(tmp_path):
     ok = dict(art, headline={"delay_gain_vs_basic": 2.5 * 1.05})
     (res_dir / "BENCH_fleet.json").write_text(json.dumps(ok))
     assert gate.check(str(res_dir), str(base_dir)) == 0
+
+
+# ---------------------------------------------------------------------------
+# TimelineBuf: ring semantics, windows, percentile recovery
+# ---------------------------------------------------------------------------
+
+
+def test_timeline_window_rule():
+    # max(T_bucket // TIMELINE_SLOTS, 1): derived from the pow2 time bucket.
+    assert obs.timeline_window(64) == 1
+    assert obs.timeline_window(8) == 1
+    assert obs.timeline_window(512) == 8
+    assert obs.timeline_window(1024) == 16
+
+
+def test_timelinebuf_ring_wrap_restores_order():
+    buf = obs.TimelineBuf.zeros(4, series=("x",), hists={"h": 3})
+    for i in range(6):
+        buf = buf.append({"x": float(i)},
+                         {"h": (jnp.array([i % 3]), jnp.array([1]))})
+    snap = buf.snapshot()
+    # Wrapped ring: the last 4 appends survive, oldest first.
+    assert snap["slots"] == 4 and snap["pos"] == 6
+    np.testing.assert_array_equal(snap["series"]["x"], [2.0, 3.0, 4.0, 5.0])
+    np.testing.assert_array_equal(snap["hists"]["h"].sum(axis=1), [1, 1, 1, 1])
+    np.testing.assert_array_equal(
+        np.argmax(snap["hists"]["h"], axis=1), [2, 0, 1, 2])
+
+
+def test_timelinebuf_concat_validates_slotting():
+    a = obs.TimelineBuf.zeros(4, series=("x",), window=2)
+    b = obs.TimelineBuf.zeros(8, series=("x",), window=2)
+    with pytest.raises(ValueError, match="slotting"):
+        a.concat(b)
+
+
+def test_hist_percentile_and_rolling():
+    from repro.obs.timeline import bucket_edges
+
+    edges = bucket_edges()
+    h = np.zeros((2, obs.DELAY_BINS))
+    h[0, 10] = 99
+    h[0, 50] = 1
+    # p50 of row 0 sits in bucket 10; p999 reaches the lone tail observation.
+    p = obs.hist_percentile(h, 0.5)
+    assert p[0] == edges[10]
+    assert obs.hist_percentile(h, 0.999)[0] == edges[50]
+    assert np.isnan(p[1])  # empty row -> NaN, not garbage
+    # Rolling window 2: row 1 sees row 0's mass.
+    r = obs.rolling_percentile(h, 0.5, window=2)
+    assert r[1] == edges[10]
+
+
+# ---------------------------------------------------------------------------
+# Sweep timelines: host recounts, stream/mesh invariance
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_timeline_matches_host_recount(obs_on):
+    cases, count = _grid(n_seeds=1), 300  # pads into the pow2 bucket
+    res = FleetSweep(chunk=4).run(cases, count)
+    assert res.timeline is not None
+    snap = res.timeline.snapshot()
+    G = len(cases)
+    window, S = snap["window"], snap["capacity"]
+    T_b = window * S
+    assert T_b >= count
+    assert snap["series"]["pick_n"].shape == (G, S)
+    # Padding is masked: per-case served sums to the real arrival count.
+    np.testing.assert_array_equal(snap["series"]["served"].sum(axis=1),
+                                  np.full(G, count))
+    # Host recount of the windowed pick mean and the delay-histogram deltas.
+    # The stacked outputs come back cut to `count`; re-pad to the bucket
+    # (padded entries carry zero weight, so the pad value is inert).
+    w = (np.arange(T_b) < count).astype(np.float32)
+    cnt = w.reshape(S, window).sum(axis=1)
+    ns = np.zeros((G, T_b), np.float32)
+    ns[:, :count] = np.asarray(res.out["n"], np.float32)
+    num = (ns * w).reshape(G, S, window).sum(axis=2)
+    expect = np.where(cnt > 0, num / np.maximum(cnt, 1.0), 0.0)
+    np.testing.assert_allclose(snap["series"]["pick_n"], expect, rtol=1e-5)
+    tot = np.ones((G, T_b), np.float32)
+    tot[:, :count] = np.asarray(res.out["total"], np.float32)
+    idx = np.asarray(obs.delay_bucket(jnp.asarray(tot)))
+    win_idx = np.arange(T_b) // window
+    for g in range(G):
+        h = np.zeros((S, obs.DELAY_BINS), np.int64)
+        np.add.at(h, (win_idx, idx[g]), w.astype(np.int64))
+        np.testing.assert_array_equal(snap["hists"]["delay"][g], h)
+
+
+def test_fleet_streamed_timeline_bit_exact(obs_on):
+    cases, count = _grid(n_seeds=1), 256
+    mat = FleetSweep(chunk=2).run(cases, count)
+    st = FleetSweep(chunk=2).run(cases, count, stream=True)
+    a, b = mat.timeline.snapshot(), st.timeline.snapshot()
+    assert set(a["series"]) == set(b["series"])
+    for name in a["series"]:
+        np.testing.assert_array_equal(a["series"][name], b["series"][name])
+    np.testing.assert_array_equal(a["hists"]["delay"], b["hists"]["delay"])
+
+
+def test_taskq_timeline_backlog_series(obs_on):
+    cases, count = _grid(n_seeds=1), 200
+    res = TaskqSweep(chunk=4).run(cases, count, _pools())
+    snap = res.timeline.snapshot()
+    G = len(cases)
+    assert "backlog" in snap["series"]  # the scan's exact per-arrival queue
+    np.testing.assert_array_equal(snap["series"]["served"].sum(axis=1),
+                                  np.full(G, count))
+    assert (snap["series"]["backlog"] >= 0).all()
+    assert snap["hists"]["delay"].sum() == G * count
+
+
+def test_sweep_timeline_rejects_bad_window():
+    out = {"total": jnp.ones(10), "n": jnp.ones(10), "k": jnp.ones(10)}
+    with pytest.raises(ValueError, match="not divisible"):
+        obs.sweep_timeline(out, jnp.ones(10), window=3)
+
+
+# ---------------------------------------------------------------------------
+# Serve timeline + SLO/convergence monitor
+# ---------------------------------------------------------------------------
+
+
+def test_serve_timeline_and_slo_report():
+    obs.set_enabled(True)
+    obs.reset_trace()
+    try:
+        toks, server = _serve_tokens(rounds=3)
+        assert server.traces == 1  # the collect variant still compiles once
+        snap = server.timeline.snapshot()
+        assert snap["window"] == 1 and snap["slots"] == 3
+        np.testing.assert_array_equal(snap["series"]["served"], [3, 3, 3])
+        np.testing.assert_array_equal(snap["hists"]["delay"].sum(axis=1),
+                                      [3, 3, 3])
+        assert (snap["series"]["pick_n"] >= snap["series"]["pick_k"]).all()
+        spec = obs.SLOSpec(target_s=60.0, percentile=0.99, window=2)
+        report = obs.slo_report(snap, spec, label="t")
+        conv = report["convergence"]
+        assert conv["settled"] and 0 <= conv["settle_slot"] < 3
+        assert conv["dwell_final"] > 0
+        assert report["max_burn_rate"] == 0.0  # nothing violates a 60 s target
+        assert report["percentile_last_s"] > 0
+        kinds = [e["kind"] for e in report["events"].events]
+        assert "controller_converged" in kinds and "slo_breach" not in kinds
+    finally:
+        obs.set_enabled(None)
+        obs.reset_trace()
+
+
+def test_serve_timeline_absent_when_disabled(obs_off):
+    _, server = _serve_tokens(rounds=1)
+    assert server.timeline is None
+
+
+def test_slo_burn_rate_and_breach_events(obs_on, tmp_path):
+    S = 8
+    hist = np.zeros((S, obs.DELAY_BINS), int)
+    hist[:4, 0] = 100                      # fast slots
+    hist[4:, obs.DELAY_BINS - 1] = 100     # every request blows the target
+    snap = {"window": 1, "capacity": S, "slots": S, "pos": S,
+            "series": {"pick_n": np.full(S, 8.0), "pick_k": np.full(S, 4.0)},
+            "hists": {"delay": hist}}
+    spec = obs.SLOSpec(target_s=1.0, percentile=0.99, window=2)
+    events = obs.EventLog("synthetic")
+    report = obs.slo_report(snap, spec, label="synthetic", events=events)
+    burn = np.asarray(report["burn_rate"])
+    assert (burn[:4] == 0).all() and (burn[4:] >= 1.0).all()
+    assert report["breach_slots"] == 4
+    kinds = [e["kind"] for e in events.events]
+    assert kinds.count("slo_breach") == 1  # one edge event, not 4
+    conv = report["convergence"]
+    assert conv == {"settle_slot": 0, "settled": True, "final_code": [8, 4],
+                    "dwell": {"8/4": 1.0}, "dwell_final": 1.0}
+    # NDJSON export: one schema-tagged object per line.
+    path = events.write(str(tmp_path / "events.ndjson"))
+    lines = [json.loads(ln) for ln in open(path)]
+    assert all(ev["schema"] == "repro.obs/event/v1" for ev in lines)
+    assert {ev["kind"] for ev in lines} == {"slo_breach", "controller_converged"}
+    # Breach events mirror into the span trace as instant marks.
+    marks = [e for e in obs.get_tracer().events() if e.get("ph") == "i"]
+    assert any(e["name"] == "obs.slo_breach" for e in marks)
+
+
+def test_slo_recovery_edge():
+    hist = np.zeros((6, obs.DELAY_BINS), int)
+    hist[1, obs.DELAY_BINS - 1] = 100  # breach slot 1, recover when it ages out
+    hist[2:, 0] = 100
+    snap = {"window": 1, "capacity": 6, "slots": 6, "pos": 6,
+            "series": {"pick_n": np.full(6, 4.0), "pick_k": np.full(6, 2.0)},
+            "hists": {"delay": hist}}
+    report = obs.slo_report(snap, obs.SLOSpec(target_s=1.0, window=1),
+                            label="edge")
+    kinds = [e["kind"] for e in report["events"].events]
+    assert kinds.count("slo_breach") == 1 and kinds.count("slo_recovered") == 1
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_prometheus_help_type_and_label_escaping():
+    buf = obs.MetricsBuf.zeros(counters=("reqs",), hists={"q": 2}, highs=("hi",))
+    buf = buf.count("reqs", 1).observe("q", jnp.array([0])).high("hi", 1.0)
+    text = buf.to_prometheus(prefix="t", labels={"run": 'a"b\\c\nd'})
+    assert "# HELP t_reqs_total Running count of 'reqs'." in text
+    assert "# TYPE t_reqs_total counter" in text
+    assert "# TYPE t_q histogram" in text
+    assert "# TYPE t_hi gauge" in text
+    esc = 'run="a\\"b\\\\c\\nd"'
+    assert "t_reqs_total{" + esc + "} 1" in text
+    assert "t_q_bucket{" + esc + ',le="0"} 1' in text
+    assert "t_q_count{" + esc + "} 1" in text
+    # No labels: bare sample names, headers still present.
+    bare = buf.to_prometheus(prefix="t")
+    assert "t_reqs_total 1" in bare and "# TYPE t_q histogram" in bare
+
+
+# ---------------------------------------------------------------------------
+# Trace hygiene: unclosed spans, instant marks
+# ---------------------------------------------------------------------------
+
+
+def test_unclosed_spans_autoclose_and_warn_once(obs_on, tmp_path):
+    import warnings
+
+    sp1 = obs.span("dangling.outer", tag=1)
+    sp1.__enter__()
+    sp2 = obs.span("dangling.inner")
+    sp2.__enter__()
+    with pytest.warns(RuntimeWarning, match="dangling"):
+        path = obs.write_trace(str(tmp_path / "t.json"))
+    doc = json.load(open(path))
+    bad = {e["name"]: e for e in doc["traceEvents"]
+           if e["args"].get("incomplete")}
+    assert set(bad) == {"dangling.outer", "dangling.inner"}
+    assert bad["dangling.outer"]["args"]["tag"] == 1
+    # The late real exits are no-ops; a second export neither warns again
+    # nor duplicates the auto-closed records.
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        sp2.__exit__(None, None, None)
+        sp1.__exit__(None, None, None)
+        sp3 = obs.span("dangling.late")
+        sp3.__enter__()
+        path2 = obs.write_trace(str(tmp_path / "t2.json"))
+    doc2 = json.load(open(path2))
+    names = [e["name"] for e in doc2["traceEvents"]]
+    assert names.count("dangling.outer") == 1
+    assert "dangling.late" in names
+
+
+def test_instant_marks_export_and_skip_aggregate(obs_on, tmp_path):
+    obs.instant("mark.one", detail="x")
+    with obs.span("real"):
+        pass
+    doc = json.load(open(obs.write_trace(str(tmp_path / "t.json"))))
+    marks = [e for e in doc["traceEvents"] if e["ph"] == "i"]
+    assert len(marks) == 1 and marks[0]["args"]["detail"] == "x"
+    agg = obs.aggregate()  # duration table ignores the durationless marks
+    assert "real" in agg and "mark.one" not in agg
+
+
+# ---------------------------------------------------------------------------
+# Launch profiler
+# ---------------------------------------------------------------------------
+
+
+def test_profile_launch_records_and_registers(obs_on):
+    import jax
+
+    obs.reset_profiles()
+    try:
+        fn = jax.jit(lambda a, b: a @ b)
+        a = jnp.ones((64, 64), jnp.float32)
+        rec = obs.profile_launch("mm", fn, a, a, warmup=1, iters=2)
+        assert rec["flops"] > 0 and rec["wall_s"] > 0
+        assert rec["bound"] in ("compute", "memory")
+        assert rec["gflops"] > 0 and rec["intensity"] > 0
+        snap = obs.profile_snapshot()
+        assert snap["mm"]["traces"] == 1
+        assert snap["mm"]["launches"] == 3  # warmup + iters
+        # First-class citizen of the shared compile registry.
+        assert obs.compile_snapshot()["profile.mm"]["launches"] == 3
+        table = obs.format_profile()
+        assert "mm" in table and "bound" in table
+        # Repeat at the same label: counts accumulate, record refreshes.
+        obs.profile_launch("mm", fn, a, a, warmup=0, iters=1)
+        assert obs.profile_snapshot()["mm"]["launches"] == 4
+    finally:
+        obs.reset_profiles()
+
+
+# ---------------------------------------------------------------------------
+# Dashboard rendering
+# ---------------------------------------------------------------------------
+
+
+def _ring_snap(rounds=6):
+    buf = obs.TimelineBuf.zeros(8, series=("lam", "pick_n", "pick_k", "served"),
+                                hists={"delay": obs.DELAY_BINS})
+    for i in range(rounds):
+        buf = buf.append(
+            {"lam": 1.0 + i, "pick_n": 8.0, "pick_k": 4.0, "served": 3.0},
+            {"delay": (jnp.array([5, 20, 40]), jnp.array([1, 1, 1]))})
+    return buf.snapshot()
+
+
+def test_ascii_dashboard_renders(obs_on):
+    snap = _ring_snap()
+    report = obs.slo_report(snap, obs.SLOSpec(target_s=10.0, window=2))
+    text = obs.ascii_dashboard({"serve": snap}, slo=report)
+    assert "timeline: serve" in text and "lam" in text
+    assert "delay_p99_s" in text and "slo" in text
+
+
+def test_sparkline_shapes():
+    assert len(obs.sparkline([1.0, 2.0, 3.0])) == 3
+    assert len(obs.sparkline(np.arange(200.0))) == 48
+    assert obs.sparkline([np.nan, 1.0])[0] == " "
+
+
+def test_html_report_self_contained(obs_on, tmp_path):
+    snap = _ring_snap()
+    report = obs.slo_report(snap, obs.SLOSpec(target_s=10.0, window=2))
+    path = obs.html_report(str(tmp_path / "dash.html"), {"serve": snap},
+                           slo=report, meta={"run": "test"})
+    html = open(path).read()
+    assert "<svg" in html and "serve" in html
+    assert "prefers-color-scheme: dark" in html  # dual-mode palette
+    assert "<script" in html
+    # Self-contained: no external fetches.
+    assert "https://" not in html and "http://" not in html
+
+
+# ---------------------------------------------------------------------------
+# Perf gate: serve SLO fields
+# ---------------------------------------------------------------------------
+
+
+def test_gate_serve_slo_fields(tmp_path):
+    from benchmarks import gate
+
+    art = {
+        "schema": "repro.serve/BENCH_serve/v1",
+        "rounds": 2, "steps": 2, "prompt_len": 16,
+        "results": [{"batch": 4, "fused_req_per_s": 100.0, "speedup": 1.1}],
+        "slo": {"settle_round": 1, "dwell_final": 0.5,
+                "max_burn_rate": 0.0, "p99_last": 0.02},
+    }
+    m = gate.normalize(art)
+    # Settle round is structurally deterministic -> count class; dwell is a
+    # simulation statistic -> stat class (±10%).
+    assert m["slo/settle_round"]["kind"] == "count"
+    assert m["slo/dwell_final"]["kind"] == "stat"
+    res_dir, base_dir = tmp_path / "res", tmp_path / "base"
+    res_dir.mkdir()
+    (res_dir / "BENCH_serve.json").write_text(json.dumps(art))
+    gate.update(str(res_dir), str(base_dir))
+    assert gate.check(str(res_dir), str(base_dir)) == 0
+    # Settle-round drift fails exactly; dwell within tolerance passes.
+    drift = dict(art, slo=dict(art["slo"], settle_round=2, dwell_final=0.52))
+    (res_dir / "BENCH_serve.json").write_text(json.dumps(drift))
+    fails, warns, notes = gate.check_file(
+        str(res_dir / "BENCH_serve.json"), str(base_dir / "BENCH_serve.json"))
+    assert len(fails) == 1 and "settle_round" in fails[0]

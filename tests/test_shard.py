@@ -268,3 +268,25 @@ def test_chunk_rounds_up_to_mesh_multiple():
     ref = FleetSweep(chunk=8).run(cases, 700)
     np.testing.assert_array_equal(np.asarray(res.out["total"]),
                                   np.asarray(ref.out["total"]))
+
+
+@needs2
+def test_fleet_mesh_timeline_bit_exact():
+    """Timelines fold per case (cut -> concat), so a collected mesh-sharded
+    run carries the identical per-window timeline to the single-device
+    path — the timeline twin of ``test_fleet_mesh_bit_exact``."""
+    from repro import obs
+
+    cases = fleet_grid()
+    try:
+        obs.set_enabled(True)
+        ref = FleetSweep(chunk=8).run(cases, 700)
+        res = FleetSweep(chunk=8, mesh=2).run(cases, 700)
+    finally:
+        obs.set_enabled(None)
+    a, b = ref.timeline.snapshot(), res.timeline.snapshot()
+    assert a["window"] == b["window"]
+    assert set(a["series"]) == set(b["series"])
+    for name in a["series"]:
+        np.testing.assert_array_equal(a["series"][name], b["series"][name])
+    np.testing.assert_array_equal(a["hists"]["delay"], b["hists"]["delay"])

@@ -64,6 +64,11 @@ def _frontier_metrics(art: dict, metrics: dict) -> None:
     for name in ("delay_gain_vs_basic", "capacity_gain_vs_latency_optimal",
                  "tofec_light_mean", "basic_light_mean"):
         _metric(metrics, f"headline/{name}", head.get(name), "stat")
+    # Flight-recorder zoom (taskq only): structural counts of the replayed
+    # cell's per-request records — drift means the recorder lost coverage.
+    flight = art.get("flight") or {}
+    for name in ("requests", "records", "exemplars"):
+        _metric(metrics, f"flight/{name}", flight.get(name), "count")
 
 
 def _multiclass_metrics(art: dict, metrics: dict) -> None:

@@ -13,8 +13,14 @@ then exports everything the layer produces:
   them — burn rate, breach events, controller pick-settling;
 * the launch **profiler** table — XLA cost_analysis FLOPs/bytes vs measured
   wallclock, roofline bound per compiled kernel;
-* the ASCII **dashboard** (sparkline timelines + SLO tiles) on stdout and
-  its self-contained HTML twin, plus the structured NDJSON event log;
+* the ASCII **dashboard** (sparkline timelines + SLO tiles + p99 exemplar
+  anatomy) on stdout and its self-contained HTML twin, plus the structured
+  NDJSON event log;
+* the per-request **flight recorder**: the sweep's slowest cell replayed
+  with ``flight=True`` (aggregate engines stream, flight replays one case)
+  → ``flight_trace.json`` (simulated-clock Perfetto trace, one track per
+  pool thread) + ``flight_records.ndjson`` (``repro.obs/flight/v1``), and
+  the serving loop's per-round phase ring;
 * the shared compile-accounting snapshot across every engine touched;
 * the host span table (compile/launch/fetch/finalize boundaries) and the
   Chrome ``trace_event`` JSON — load it in ``chrome://tracing`` / Perfetto.
@@ -74,7 +80,8 @@ def serve_rounds(rounds: int, steps: int) -> tuple:
     try:
         for _ in range(rounds):
             server.serve_round(keys, steps=steps)
-        return server.metrics.snapshot(), server.timeline.snapshot()
+        return (server.metrics.snapshot(), server.timeline.snapshot(),
+                server.flight.records())
     finally:
         proxy.close()
 
@@ -86,9 +93,13 @@ def taskq_grid(count: int) -> tuple:
     cases = grid_cases([10.0, 25.0],
                        [PolicySpec.tofec(), PolicySpec.static(12, 6)],
                        [0], CLS, L)
-    res = TaskqSweep(chunk=4).run(cases, count,
-                                  store.device_pools(n_max=CLS.n_max))
-    return res.metrics.snapshot(), res.timeline.snapshot()
+    dp = store.device_pools(n_max=CLS.n_max)
+    sweep = TaskqSweep(chunk=4)
+    res = sweep.run(cases, count, dp)
+    # Flight zoom: replay the grid's slowest cell with the recorder on.
+    worst = int(np.argmax(res.to_numpy()["total"].mean(axis=1)))
+    log = sweep.replay_flight(res, dp, worst)
+    return res.metrics.snapshot(), res.timeline.snapshot(), log
 
 
 def profile_kernels(count: int) -> None:
@@ -121,14 +132,17 @@ def main() -> None:
     obs.reset_trace()
     obs.reset_profiles()
 
-    serve_snap, serve_tl = serve_rounds(rounds=2 if args.fast else 4,
-                                        steps=2 if args.fast else 4)
-    taskq_snap, taskq_tl = taskq_grid(count=128 if args.fast else 512)
+    serve_snap, serve_tl, serve_flight = serve_rounds(
+        rounds=2 if args.fast else 4, steps=2 if args.fast else 4)
+    taskq_snap, taskq_tl, flight_log = taskq_grid(
+        count=128 if args.fast else 512)
     profile_kernels(count=128 if args.fast else 1024)
 
     spec = obs.SLOSpec(target_s=0.25, percentile=0.99, window=4)
     events = obs.EventLog("obs_demo")
-    report = obs.slo_report(serve_tl, spec, label="obs_demo", events=events)
+    exemplars = flight_log.exemplars(3)
+    report = obs.slo_report(serve_tl, spec, label="obs_demo", events=events,
+                            exemplars=exemplars)
     profile = obs.profile_snapshot()
 
     print("== serving metrics ==")
@@ -144,7 +158,8 @@ def main() -> None:
 
     print("\n== dashboard ==")
     print(obs.ascii_dashboard({"serve": serve_tl, "taskq": taskq_tl},
-                              slo=report, profile=profile))
+                              slo=report, profile=profile,
+                              exemplars=exemplars))
 
     print("== span table ==")
     print(obs.get_tracer().format_table())
@@ -157,17 +172,24 @@ def main() -> None:
         json.dump({"meta": obs.run_meta(), "serve": serve_snap,
                    "taskq": taskq_snap,
                    "slo": {k: v for k, v in report.items() if k != "events"},
+                   "serve_flight": serve_flight,
                    "profile": profile,
                    "compile": obs.compile_snapshot()}, f, indent=1)
     dash_path = obs.html_report(
         os.path.join(out_dir, "obs_dashboard.html"),
         {"serve": serve_tl, "taskq": taskq_tl}, slo=report, profile=profile,
-        meta={"run": "obs_demo", "fast": bool(args.fast)})
+        exemplars=exemplars, meta={"run": "obs_demo", "fast": bool(args.fast)})
     events_path = events.write(os.path.join(out_dir, "obs_events.ndjson"))
+    flight_trace = flight_log.write_trace(
+        os.path.join(out_dir, "flight_trace.json"))
+    flight_recs = flight_log.write_ndjson(
+        os.path.join(out_dir, "flight_records.ndjson"))
     print(f"\nwrote {trace_path}")
     print(f"wrote {snap_path}")
     print(f"wrote {dash_path}")
     print(f"wrote {events_path}")
+    print(f"wrote {flight_trace}")
+    print(f"wrote {flight_recs}")
 
 
 if __name__ == "__main__":

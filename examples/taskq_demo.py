@@ -83,8 +83,8 @@ def main() -> None:
     exact_pols = fluid_pols + [PolicySpec.greedy()]  # greedy: exact engine only
 
     t0 = time.monotonic()
-    exact = TaskqSweep(chunk=32).run(grid_cases(rates, exact_pols, [0], CLS, L),
-                                     count, dp)
+    sweep = TaskqSweep(chunk=32)
+    exact = sweep.run(grid_cases(rates, exact_pols, [0], CLS, L), count, dp)
     jax.block_until_ready(exact.out)
     dt_exact = time.monotonic() - t0
 
@@ -109,12 +109,20 @@ def main() -> None:
     print(f"greedy (exact engine only): mean delay {g[0].mean:.3f}s at "
           f"λ={g[0].lam:.0f} → {g[-1].mean:.3f}s at λ={g[-1].lam:.0f}")
 
+    # Flight zoom: replay the slowest grid cell with the per-request
+    # recorder on (aggregate engines stream, flight replays one case).
+    worst = int(np.argmax(exact.to_numpy()["total"].mean(axis=1)))
+    flight_log = sweep.replay_flight(exact, dp, worst)
+
     out = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "results",
                        "BENCH_taskq.json")
-    art = write_taskq_artifact(os.path.abspath(out), exact)
+    art = write_taskq_artifact(os.path.abspath(out), exact, flight=flight_log)
     print(f"wrote {os.path.abspath(out)} "
           f"(headline: {art['headline'].get('delay_gain_vs_basic', float('nan')):.2f}x "
           f"light-load delay gain vs basic)")
+    fb = art["flight"]
+    print(f"flight replay [{fb['label']}]: {fb['records']} task records, "
+          f"{fb['exemplars']} exemplars")
 
 
 if __name__ == "__main__":

@@ -99,7 +99,8 @@ class SimResult:
 
 
 class _Task:
-    __slots__ = ("req", "delay", "cancelled", "started", "done")
+    __slots__ = ("req", "delay", "cancelled", "started", "done", "t_start",
+                 "t_end")
 
     def __init__(self, req, delay: float):
         self.req = req
@@ -107,6 +108,8 @@ class _Task:
         self.cancelled = False
         self.started = False
         self.done = False
+        self.t_start = np.nan
+        self.t_end = np.nan
 
 
 class _Request:
@@ -127,11 +130,19 @@ def simulate(
     samplers: list | None = None,
     seed: int = 0,
     warmup_frac: float = 0.05,
+    event_log: list | None = None,
 ) -> SimResult:
     """Run the event simulation over the given arrival times.
 
     ``sampler``: object with .sample(rng, k, n) → (n,) task delays (used for
     cls 0); ``samplers`` optionally overrides per class.
+
+    ``event_log``: optional list the oracle appends one per-task record to
+    at every request departure — ``(arrival_index, lane, kind, start, end,
+    depart)`` with kind 0 = won, 1 = cancelled in queue, 2 = cancelled in
+    service (start/end are NaN where the task never started) — the
+    row-for-row host twin of the device engine's flight records
+    (:class:`repro.obs.flight.FlightLog`).
 
     Thin front-end over :func:`simulate_shared_pool` with the FIFO
     discipline and one shared policy instance (which observes the true
@@ -144,6 +155,7 @@ def simulate(
     return simulate_shared_pool(
         policy, arrivals, cls_ids, samplers or [sampler],
         L=L, discipline="fifo", seed=seed, warmup_frac=warmup_frac,
+        event_log=event_log,
     )
 
 
@@ -160,6 +172,7 @@ def simulate_shared_pool(
     drr_quantum: float = 8.0,
     seed: int = 0,
     warmup_frac: float = 0.05,
+    event_log: list | None = None,
 ) -> SimResult:
     """Multi-class shared-pool oracle: C classes contending for ONE L-thread
     pool under a pluggable admission discipline (§IV's shared-resource view).
@@ -228,6 +241,7 @@ def simulate_shared_pool(
                 continue
             idle -= 1
             task.started = True
+            task.t_start = now
             req = task.req
             if np.isnan(req.stats.t_first_start):
                 req.stats.t_first_start = now
@@ -307,6 +321,7 @@ def simulate_shared_pool(
             if task.cancelled or task.done:
                 continue
             task.done = True
+            task.t_end = now
             idle += 1
             req = task.req
             req.stats.completed_tasks += 1
@@ -317,7 +332,19 @@ def simulate_shared_pool(
                     if not t2.done and not t2.cancelled:
                         t2.cancelled = True
                         if t2.started:
+                            t2.t_end = now
                             idle += 1
+                if event_log is not None:
+                    # One row per task lane, finalized at departure: won
+                    # tasks keep their completion end, in-service
+                    # cancellations end at the departure instant, queued
+                    # cancellations never start (NaN start/end).
+                    for lane, t2 in enumerate(req.tasks):
+                        kind = 0 if t2.done else (2 if t2.started else 1)
+                        event_log.append((
+                            req.stats.arrival_index, lane, kind,
+                            t2.t_start, t2.t_end, now,
+                        ))
             start_tasks()
             admit()
 

@@ -18,7 +18,11 @@ Layers (see ROADMAP "Conventions"):
 * launch profiling — :func:`profile_launch` cost-model + wallclock records
   registered into the same compile registry;
 * dashboards — :func:`ascii_dashboard` / :func:`html_report` over the
-  timeline snapshots, SLO reports, and profiler tables.
+  timeline snapshots, SLO reports, and profiler tables;
+* per-request flight recorder — :class:`FlightLog` over the exact engine's
+  static ``flight=True`` records (simulated-time Chrome traces, NDJSON
+  streams, p99 exemplar mining) and :class:`FlightRing` for the serving
+  loop's per-round phase breakdown.
 
 Everything is gated on ``REPRO_OBS=1`` (or :func:`set_enabled`); disabled,
 the layer costs one branch per site and changes no compiled graph.
@@ -56,6 +60,13 @@ from repro.obs.profile import (
     reset_profiles,
 )
 from repro.obs.dashboard import ascii_dashboard, html_report, sparkline
+from repro.obs.flight import (
+    FLIGHT_SCHEMA,
+    FlightLog,
+    FlightRing,
+    exemplar_panel,
+    oracle_task_rows,
+)
 from repro.obs.trace import (
     Tracer,
     aggregate,
@@ -65,6 +76,7 @@ from repro.obs.trace import (
     span,
     traced,
     write_trace,
+    write_trace_doc,
 )
 from repro.obs.meta import SCHEMA_VERSION, git_rev, run_meta
 
@@ -99,12 +111,18 @@ __all__ = [
     "ascii_dashboard",
     "html_report",
     "sparkline",
+    "FLIGHT_SCHEMA",
+    "FlightLog",
+    "FlightRing",
+    "exemplar_panel",
+    "oracle_task_rows",
     "Tracer",
     "span",
     "traced",
     "instant",
     "get_tracer",
     "write_trace",
+    "write_trace_doc",
     "aggregate",
     "reset_trace",
     "SCHEMA_VERSION",

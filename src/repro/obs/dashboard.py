@@ -86,8 +86,11 @@ def _fmt(v) -> str:
 
 
 def ascii_dashboard(timelines: dict, slo: dict | None = None,
-                    profile: dict | None = None) -> str:
-    """Terminal view: sparkline per series + SLO + profiler sections."""
+                    profile: dict | None = None,
+                    exemplars: list | None = None) -> str:
+    """Terminal view: sparkline per series + SLO + profiler sections, plus
+    the p99 exemplar task-race anatomy when flight exemplars are passed
+    (:meth:`repro.obs.flight.FlightLog.exemplars`)."""
     lines = []
     for name, snap in timelines.items():
         lines.append(f"== timeline: {name} "
@@ -118,6 +121,11 @@ def ascii_dashboard(timelines: dict, slo: dict | None = None,
             f"  pick settled at slot {conv.get('settle_slot')} on "
             f"{conv.get('final_code')} "
             f"(dwell {_fmt(conv.get('dwell_final'))})")
+    if exemplars:
+        from repro.obs.flight import exemplar_panel
+
+        lines.append("== p99 exemplars (task-race anatomy) ==")
+        lines.extend("  " + ln for ln in exemplar_panel(exemplars).splitlines())
     if profile:
         from repro.obs.profile import format_profile
 
@@ -340,6 +348,67 @@ def _tiles(slo: dict) -> str:
     ) + "</div>"
 
 
+_EX_H = 18  # px per task row in the exemplar anatomy SVG
+
+
+def _exemplar_html(exemplars: list) -> str:
+    """Per-request task-race anatomy charts: one horizontal bar per task
+    lane on the request's [arrival, depart] axis — winners in the series
+    color, cancellations-in-service truncated in the critical color, queue
+    wait as a muted leader line, lanes cancelled in queue as hollow
+    markers.  Labels wear text tokens, never the series color."""
+    blocks = []
+    for ex in exemplars:
+        t0, t1 = ex["arrival"], ex["depart"]
+        span = max(t1 - t0, 1e-12)
+        x0, x1 = _PAD_L, _W - _PAD_R
+
+        def px(t):
+            return x0 + (x1 - x0) * (t - t0) / span
+
+        h = _PAD_T + _EX_H * len(ex["tasks"]) + _PAD_B
+        rows = []
+        for r, task in enumerate(ex["tasks"]):
+            y = _PAD_T + _EX_H * r + _EX_H / 2
+            thr = (f"t{task['lane']:02d}·thr{task['thread']:02d}"
+                   if task["thread"] >= 0 else f"t{task['lane']:02d}·queued")
+            rows.append(
+                f'<text class="axis" x="{x0 - 4}" y="{y + 3:.1f}" '
+                f'text-anchor="end">{html.escape(thr)}</text>')
+            if task["start"] is None:
+                rows.append(
+                    f'<circle cx="{x1:.1f}" cy="{y:.1f}" r="3" fill="none" '
+                    f'stroke="var(--muted)" stroke-width="1.5"/>')
+                continue
+            cancelled = task["kind"] == "cancel_service"
+            color = "var(--critical)" if cancelled else "var(--series-1)"
+            rows.append(
+                f'<line x1="{px(t0):.1f}" y1="{y:.1f}" '
+                f'x2="{px(task["start"]):.1f}" y2="{y:.1f}" '
+                f'stroke="var(--muted)" stroke-width="1" '
+                f'stroke-dasharray="2 3"/>')
+            rows.append(
+                f'<rect x="{px(task["start"]):.1f}" y="{y - 5:.1f}" '
+                f'width="{max(px(task["end"]) - px(task["start"]), 1):.1f}" '
+                f'height="10" rx="2" fill="{color}"/>')
+        # Departure hairline: where the k-th completion cut the race.
+        rows.append(
+            f'<line x1="{x1:.1f}" y1="{_PAD_T}" x2="{x1:.1f}" '
+            f'y2="{h - _PAD_B}" stroke="var(--baseline)" stroke-width="1" '
+            f'stroke-dasharray="4 3"/>')
+        title = (f"req {ex['req']} · total {ex['total_s']:.4g}s "
+                 f"(queue {ex['queue_s']:.4g}s) · code "
+                 f"({ex['n']},{ex['k']})")
+        blocks.append(
+            f'<div class="chart"><div class="t">{html.escape(title)}</div>'
+            f'<svg viewBox="0 0 {_W} {h}" role="img" '
+            f'aria-label="{html.escape(title)}">{"".join(rows)}'
+            f'<text class="axis" x="{x0}" y="{h - 4}">0s</text>'
+            f'<text class="axis" x="{x1}" y="{h - 4}" '
+            f'text-anchor="end">{span:.4g}s</text></svg></div>')
+    return '<div class="charts">' + "".join(blocks) + "</div>"
+
+
 def _profile_table(profile: dict) -> str:
     head = ("fn", "flops", "bytes", "wall ms", "gflop/s", "gb/s", "bound",
             "peak %")
@@ -363,8 +432,13 @@ def _profile_table(profile: dict) -> str:
 
 def html_report(path: str, timelines: dict, *, slo: dict | None = None,
                 profile: dict | None = None, meta: dict | None = None,
+                exemplars: list | None = None,
                 title: str = "repro.obs — time-resolved telemetry") -> str:
-    """Write the self-contained HTML dashboard; returns the path."""
+    """Write the self-contained HTML dashboard; returns the path.
+
+    ``exemplars`` (optional flight-recorder anatomies,
+    :meth:`repro.obs.flight.FlightLog.exemplars`) adds the per-request
+    task-race breakdown section."""
     parts = [
         "<!doctype html><html><head><meta charset='utf-8'>",
         f"<title>{html.escape(title)}</title>",
@@ -394,6 +468,11 @@ def html_report(path: str, timelines: dict, *, slo: dict | None = None,
                 f"{hname} p{p * 100:g} (windowed, s)", p99,
                 target=spec.get("target_s")))
         parts.append("</div>")
+    if exemplars:
+        parts.append("<h2>p99 exemplars "
+                     '<span class="meta">task-race anatomy, simulated '
+                     "time</span></h2>")
+        parts.append(_exemplar_html(exemplars))
     if profile:
         parts.append("<h2>launch profile</h2>")
         parts.append(_profile_table(profile))

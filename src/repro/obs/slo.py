@@ -112,7 +112,12 @@ def violation_fraction(hist_rows, target_s: float) -> np.ndarray:
 
 def burn_rate(hist_rows, spec: SLOSpec) -> np.ndarray:
     """Windowed budget burn: violation fraction over the trailing
-    ``spec.window`` slots divided by the error budget (>= 1 = breach)."""
+    ``spec.window`` slots divided by the error budget (>= 1 = breach).
+
+    Windows with zero observations are NaN — "no data", never a breach or
+    a recovery: an idle stretch must not trip the monitor either way, and
+    NaN propagates as a gap through the dashboards' NaN-aware renderers
+    (same convention as :func:`repro.obs.timeline.hist_percentile`)."""
     h = np.asarray(hist_rows, np.float64)
     c = h.cumsum(axis=0)
     if spec.window < len(c):
@@ -120,7 +125,9 @@ def burn_rate(hist_rows, spec: SLOSpec) -> np.ndarray:
                              c[: -spec.window]], axis=0)
     else:
         lo = np.zeros_like(c)
-    return violation_fraction(c - lo, spec.target_s) / spec.budget
+    win = c - lo
+    rate = violation_fraction(win, spec.target_s) / spec.budget
+    return np.where(win.sum(axis=-1) > 0, rate, np.nan)
 
 
 def convergence(pick_n, pick_k) -> dict:
@@ -156,14 +163,24 @@ def convergence(pick_n, pick_k) -> dict:
 
 
 def slo_report(snap: dict, spec: SLOSpec, *, label: str = "serve",
-               hist: str = "delay", events: EventLog | None = None) -> dict:
+               hist: str = "delay", events: EventLog | None = None,
+               exemplars: list | None = None) -> dict:
     """The SLO/convergence report for one timeline snapshot.
 
     Emits ``slo_breach`` / ``slo_recovered`` edges (burn rate crossing 1)
     and one ``controller_converged`` event into ``events`` (a fresh
-    :class:`EventLog` when None — returned under ``"events"`` either way)."""
+    :class:`EventLog` when None — returned under ``"events"`` either way).
+    NaN burn slots (no-data windows) are skipped: they neither open nor
+    close a breach.
+
+    ``exemplars``: optional anatomies from
+    :meth:`repro.obs.flight.FlightLog.exemplars` — breach events then carry
+    the offending exemplar request ids (``exemplar_reqs``) so a breach line
+    links straight to the per-request flight records, and the report
+    summarizes them under ``"exemplars"``."""
     if events is None:
         events = EventLog(label)
+    ex_reqs = [int(ex["req"]) for ex in (exemplars or [])]
     rows = np.asarray(snap["hists"][hist])
     burn = burn_rate(rows, spec)
     p_series = rolling_percentile(rows, spec.percentile, spec.window)
@@ -171,10 +188,13 @@ def slo_report(snap: dict, spec: SLOSpec, *, label: str = "serve",
 
     breached = False
     for slot, b in enumerate(burn):
+        if not np.isfinite(b):
+            continue  # no data: hold the current breach state
         if b >= 1.0 and not breached:
             breached = True
             events.emit("slo_breach", slot=slot, burn_rate=float(b),
-                        target_s=spec.target_s, percentile=spec.percentile)
+                        target_s=spec.target_s, percentile=spec.percentile,
+                        exemplar_reqs=ex_reqs)
         elif b < 1.0 and breached:
             breached = False
             events.emit("slo_recovered", slot=slot, burn_rate=float(b))
@@ -184,6 +204,13 @@ def slo_report(snap: dict, spec: SLOSpec, *, label: str = "serve",
                     dwell_final=conv["dwell_final"])
 
     finite = p_series[np.isfinite(p_series)]
+    finite_burn = burn[np.isfinite(burn)]
+    report_exemplars = [
+        {"req": int(ex["req"]), "total_s": float(ex["total_s"]),
+         "queue_s": float(ex["queue_s"]), "n": int(ex["n"]),
+         "k": int(ex["k"])}
+        for ex in (exemplars or [])
+    ]
     return {
         "schema": REPORT_SCHEMA,
         "label": label,
@@ -191,8 +218,10 @@ def slo_report(snap: dict, spec: SLOSpec, *, label: str = "serve",
         "slots": int(len(burn)),
         "window_arrivals": int(snap.get("window", 1)),
         "burn_rate": [float(b) for b in burn],
-        "max_burn_rate": float(burn.max()) if len(burn) else 0.0,
-        "breach_slots": int((burn >= 1.0).sum()),
+        "max_burn_rate": (
+            float(finite_burn.max()) if len(finite_burn) else 0.0),
+        "breach_slots": int((finite_burn >= 1.0).sum()),
+        "exemplars": report_exemplars,
         "percentile_series_s": [float(p) for p in p_series],
         "percentile_last_s": float(finite[-1]) if len(finite) else None,
         "convergence": conv,

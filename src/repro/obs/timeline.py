@@ -73,8 +73,11 @@ def hist_percentile(hist, p: float) -> np.ndarray:
     """Recover a percentile from bucket counts (host side).
 
     ``hist``: (..., DELAY_BINS) counts.  Returns the upper edge of the
-    bucket holding the p-quantile observation (<= ~9% conservative), NaN
-    where a row holds no observations."""
+    bucket holding the p-quantile observation (<= ~9% conservative).  An
+    all-zero row (a window that saw no observations) is explicitly NaN —
+    never a clamped bucket edge — so downstream consumers
+    (:func:`rolling_percentile` series, the SLO burn rate, the dashboards'
+    gap-aware sparklines/polylines) can tell "no data" from "fast"."""
     h = np.asarray(hist, np.float64)
     tot = h.sum(axis=-1)
     cum = h.cumsum(axis=-1)
@@ -89,7 +92,10 @@ def rolling_percentile(hist_rows, p: float, window: int) -> np.ndarray:
 
     ``hist_rows``: (S, DELAY_BINS) per-slot deltas; row i's value is the
     p-quantile of slots max(0, i-window+1)..i combined — the windowed-tail
-    series the SLO burn rate is judged on."""
+    series the SLO burn rate is judged on.  Windows whose combined rows are
+    all zero report NaN (inherited from :func:`hist_percentile`)."""
+    if int(window) < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
     h = np.asarray(hist_rows, np.float64)
     c = h.cumsum(axis=0)
     lo = np.concatenate([np.zeros_like(c[:window]), c[:-window]], axis=0) \
@@ -227,6 +233,8 @@ def sweep_timeline(out: dict, interarrivals, *, window: int, valid=None,
     real-arrival mask (bucket padding must not count); all reductions are
     per-slot and leading-batch invariant, so streamed / sharded runs carry
     the identical timeline."""
+    if int(window) < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
     total = out["total"]
     T = total.shape[-1]
     if T % window:

@@ -24,6 +24,22 @@ import warnings
 from repro.obs.state import enabled
 
 
+def write_trace_doc(path: str, events: list) -> str:
+    """Serialize a Chrome ``trace_event`` list as a loadable trace document.
+
+    The shared writer behind :meth:`Tracer.write_trace` (wallclock spans)
+    and :meth:`repro.obs.flight.FlightLog.write_trace` (simulated-clock
+    task records): both produce the same ``{"traceEvents": [...]}`` JSON
+    envelope Perfetto / ``chrome://tracing`` load directly — only the
+    meaning of ``ts`` (monotonic µs vs simulated-seconds × 1e6) differs.
+    Returns the path."""
+    doc = {"traceEvents": list(events), "displayTimeUnit": "ms"}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(doc, fh)
+    return path
+
+
 class Tracer:
     def __init__(self) -> None:
         self._lock = threading.Lock()
@@ -158,10 +174,7 @@ class Tracer:
     def write_trace(self, path: str) -> str:
         """Write Chrome trace_event JSON; returns the path."""
         self._close_incomplete()
-        doc = {"traceEvents": self.events(), "displayTimeUnit": "ms"}
-        with open(path, "w") as fh:
-            json.dump(doc, fh)
-        return path
+        return write_trace_doc(path, self.events())
 
     def reset(self) -> None:
         with self._lock:

@@ -556,6 +556,7 @@ class ClosedLoopServer:
         self._last_now: float | None = None
         self._mbuf = None  # device MetricsBuf, created on first collected round
         self._tlbuf = None  # device TimelineBuf ring, same lifecycle as _mbuf
+        self._flight = None  # host FlightRing, same lifecycle as _mbuf
 
     @property
     def traces(self) -> int:
@@ -582,6 +583,15 @@ class ClosedLoopServer:
         :data:`_TL_CAP` rounds are retained.  Call ``.snapshot()`` for
         oldest-first numpy series — the only host sync."""
         return self._tlbuf
+
+    @property
+    def flight(self):
+        """The host-side :class:`repro.obs.flight.FlightRing` of per-round
+        phase breakdowns (admit → decode → generate on the compacted
+        simulated round clock) — where each round spent its budget.  None
+        until a round runs with REPRO_OBS=1; the last :data:`_TL_CAP`
+        rounds are retained, matching the timeline ring."""
+        return self._flight
 
     def put(self, key: str, payload: bytes, cls_id: int = 0):
         """Queue a write through the proxy (encodes under the fed-back code
@@ -690,9 +700,12 @@ class ClosedLoopServer:
     def _serve_round(self, keys: list[str], *, steps: int,
                      q: float | None = None) -> ClosedLoopResult:
         payload_len = self.prompt_len * 4
+        collect = obs.enabled()
+        t_round0 = time.monotonic()
         with obs.span("serve.fetch", keys=len(keys)):
             results = self.proxy.read_many(keys, self.layout, payload_len,
                                            raw=True)
+        t_fetch = time.monotonic()
         ok = [r.ok for r in results]
         good = [r for r in results if r.ok]
         if not good:
@@ -710,7 +723,6 @@ class ClosedLoopServer:
         n, k = self.layout.N, self.layout.K
         mats = codec.decode_mats(np.asarray(present, np.int64), n, k)
         mats_p, rows_p, bkey = codec.pad_to_bucket("dec", mats, rows, n, k)
-        collect = obs.enabled()
         key = ("pfd", *bkey, self.prompt_len, self.layout.strip_bytes, collect)
         fn = self._fn(key)
         args = (
@@ -738,6 +750,7 @@ class ClosedLoopServer:
                 )
             else:
                 carry, n_nxt, k_nxt, _toks, logits, cache = fn(*args)
+        t_launch = time.monotonic()
         self.stats.launches += 1
         self.step.carry = carry
         # Generation continues at the padded batch (same trace each round);
@@ -754,6 +767,22 @@ class ClosedLoopServer:
         # forced the launch, so this sync is free (reading it before the
         # decode loop would stall the round on the fused launch).
         next_code = (int(n_nxt), int(k_nxt))
+        if collect:
+            # One flight-ring record per collected round: where the round's
+            # budget went.  "decode" covers the whole fused admission +
+            # decode + prefill launch (one dispatch — the engine cannot
+            # split it host-side); "generate" includes the sync that forces
+            # it, which is exactly the wait the client sees.
+            from repro.obs.flight import FlightRing
+
+            if self._flight is None:
+                self._flight = FlightRing(self._TL_CAP, label="serve")
+            self._flight.record(
+                [("admit", t_fetch - t_round0),
+                 ("decode", t_launch - t_fetch),
+                 ("generate", time.monotonic() - t_launch)],
+                requested=len(keys), served=len(good), code=next_code,
+            )
         if self.write_policy is not None:
             self.write_policy.push(*next_code)  # close the write loop
         return ClosedLoopResult(

@@ -18,7 +18,11 @@ same pre-sampled trace pools.
   engine observes.
 * :mod:`repro.taskq.sweep` — ``TaskqSweep``: (λ × policy × seed) grids
   vmapped with the fleet's bucketed jit cache and chunked launches, trace
-  pools broadcast grid-wide; ``BENCH_taskq.json`` artifact writer.
+  pools broadcast grid-wide; ``BENCH_taskq.json`` artifact writer;
+  ``replay_flight`` re-runs one grid point with the per-request flight
+  recorder on (``flight=True``) and returns the
+  :class:`repro.obs.flight.FlightLog` — aggregate engines stream, flight
+  replays one case.
 
 Use ``taskq`` when per-request exactness matters (tail percentiles under
 cancellation, Greedy/idle-aware policies, trace replay); use ``fleet``/

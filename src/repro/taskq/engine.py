@@ -73,6 +73,7 @@ def taskq_scan_core(
     collect: bool = False,
     valid: jax.Array | None = None,
     window: int | None = None,
+    flight: bool = False,
 ) -> dict[str, jax.Array]:
     """Traceable single-point engine body shared by the jitted entry point
     and :class:`repro.taskq.sweep.TaskqSweep`.
@@ -103,6 +104,18 @@ def taskq_scan_core(
     :class:`repro.obs.TimelineBuf` of per-window series — here the backlog
     series is the scan's *exact* per-arrival queue length. The primary
     outputs' graph is untouched either way.
+
+    ``flight`` (static, independent of ``collect``) additionally emits the
+    per-request task records the aggregate reductions discard: a
+    ``"flight"`` dict of ``arrival``/``depart`` (T,) and per-lane
+    ``start``/``tent``/``thread`` (T, W) arrays. Starts and tentative
+    completions come from the pass-1 assignment (exact for every task that
+    really starts — the pass-1/pass-2 free multisets agree below D); the
+    assigned-thread id is captured in the pass-2 settle loop, whose thread
+    state IS the real one, so per-thread task intervals never overlap (a
+    lane that never starts records thread −1). Host-side reconstruction —
+    cancel kinds, spans, Chrome traces — lives in
+    :class:`repro.obs.flight.FlightLog`. Off, the graph is bit-identical.
     """
     W = pools.shape[2]
     n_cap = W
@@ -159,12 +172,28 @@ def taskq_scan_core(
         D = jnp.sort(C)[k - 1]
 
         # ---- pass 2: replay with cancellation → new thread state ---------
-        def settle(m, f):
-            j = jnp.argmin(f)
-            started = (m < n) & (jnp.maximum(t, f[j]) < D)
-            return jnp.where(started, f.at[j].set(jnp.minimum(C[m], D)), f)
+        if flight:
+            # Same replay, additionally recording WHICH thread each started
+            # task held — pass-2 identities are the real occupancy (pass-1
+            # ids can differ on ties even though the free multisets agree).
+            def settle_rec(m, st):
+                f, tid = st
+                j = jnp.argmin(f)
+                started = (m < n) & (jnp.maximum(t, f[j]) < D)
+                f = jnp.where(started, f.at[j].set(jnp.minimum(C[m], D)), f)
+                tid = tid.at[m].set(
+                    jnp.where(started, j.astype(jnp.int32), jnp.int32(-1)))
+                return f, tid
 
-        b = jax.lax.fori_loop(0, n_cap, settle, b)
+            b, tid = jax.lax.fori_loop(
+                0, n_cap, settle_rec, (b, jnp.full(n_cap, -1, jnp.int32)))
+        else:
+            def settle(m, f):
+                j = jnp.argmin(f)
+                started = (m < n) & (jnp.maximum(t, f[j]) < D)
+                return jnp.where(started, f.at[j].set(jnp.minimum(C[m], D)), f)
+
+            b = jax.lax.fori_loop(0, n_cap, settle, b)
 
         # ---- bookkeeping -------------------------------------------------
         a = S[0]  # admission = first task start (§II-C's T_1)
@@ -180,6 +209,8 @@ def taskq_scan_core(
             cancel_q = jnp.sum(live & (S >= D)).astype(jnp.int32)
             cancel_s = jnp.sum(live & (S < D) & (C > D)).astype(jnp.int32)
             ys = ys + (idle, q, cancel_q, cancel_s)
+        if flight:
+            ys = ys + (t, D, S, C, tid)
         return (t, b, ring, pos, q_ewma), ys
 
     init = (
@@ -192,6 +223,11 @@ def taskq_scan_core(
     _, ys = jax.lax.scan(step, init, (interarrivals, pool_idx))
     tot, dq, ds, ns, ks = ys[:5]
     out = {"total": tot, "queueing": dq, "service": ds, "n": ns, "k": ks}
+    if flight:
+        fl_t, fl_d, fl_s, fl_c, fl_tid = ys[-5:]
+        out["flight"] = {"arrival": fl_t, "depart": fl_d, "start": fl_s,
+                         "tent": fl_c, "thread": fl_tid}
+        ys = ys[:-5]
     if collect:
         idle_t, q_t, cq_t, cs_t = ys[5:]
         if valid is None:
@@ -219,15 +255,15 @@ def taskq_scan_core(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("L", "q_cap", "collect", "window")
+    jax.jit, static_argnames=("L", "q_cap", "collect", "window", "flight")
 )
 def _taskq_scan_jit(
     cfg, interarrivals, pool_idx, pools, pool_sizes, *, L, q_cap, collect,
-    window,
+    window, flight,
 ):
     return taskq_scan_core(
         cfg, interarrivals, pool_idx, pools, pool_sizes,
-        L=L, q_cap=q_cap, collect=collect, window=window,
+        L=L, q_cap=q_cap, collect=collect, window=window, flight=flight,
     )
 
 
@@ -242,15 +278,21 @@ def taskq_scan(
     q_cap: int = 128,
     collect: bool | None = None,
     window: int | None = None,
+    flight: bool = False,
 ) -> dict[str, jax.Array]:
     """Jitted single-grid-point entry point (the serial-scan baseline of
     ``benchmarks.kernel_bench.bench_taskq_engine``). ``collect`` defaults
-    to the ``REPRO_OBS`` gate; it and ``window`` are static jit args, so a
-    constant setting keeps compile counts at their pinned values."""
+    to the ``REPRO_OBS`` gate; it, ``window`` and ``flight`` are static jit
+    args, so a constant setting keeps compile counts at their pinned
+    values."""
     if collect is None:
         collect = obs.enabled()
+    if window is not None:
+        window = int(window)
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
     return _taskq_scan_jit(
         cfg, interarrivals, pool_idx, pools, pool_sizes,
         L=L, q_cap=q_cap, collect=bool(collect),
-        window=int(window) if window else None,
+        window=window, flight=bool(flight),
     )

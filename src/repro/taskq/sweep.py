@@ -229,6 +229,39 @@ class TaskqSweep(ChunkedVmapSweep):
             mesh_shape=self.mesh_shape,
         )
 
+    def replay_flight(self, result: TaskqResult, pools: DevicePools,
+                      case_index: int, *, label: str | None = None):
+        """Re-run ONE grid point of ``result`` with the flight recorder on.
+
+        The "aggregate engines stream, flight replays one case" rule: grid
+        runs keep their streamed/stacked reductions, and an anomalous cell
+        is zoomed into after the fact — this regenerates the case's exact
+        host streams from its seed (:func:`taskq_streams`), replays it
+        through :func:`repro.taskq.engine.taskq_scan` with ``flight=True``
+        (its own jit cache entry; the sweep's compiled buckets are
+        untouched) and returns the :class:`repro.obs.flight.FlightLog`.
+        The replay consumes the stored ``result.cfg`` row, so its
+        per-request delays equal the sweep cell's — pinned in
+        ``tests/test_flight.py``.
+        """
+        from repro.obs.flight import FlightLog
+        from repro.taskq.engine import taskq_scan
+
+        G = len(result.cases)
+        if not 0 <= case_index < G:
+            raise ValueError(f"case_index {case_index} outside grid of {G}")
+        case = result.cases[case_index]
+        cfg_row = {name: np.asarray(v[case_index])
+                   for name, v in result.cfg.items() if name != "obs_count"}
+        inter, idx = taskq_streams(case, result.count, pools.n_rows)
+        out = taskq_scan(
+            cfg_row, np.asarray(inter, np.float32),
+            np.asarray(idx, np.int32), pools.pools, pools.sizes_mb,
+            L=case.L, q_cap=self.q_cap, collect=False, flight=True,
+        )
+        return FlightLog(
+            out, label=label or f"taskq[{case_index}]:{case.policy.name}")
+
 
 def write_taskq_artifact(
     path: str,
@@ -236,12 +269,19 @@ def write_taskq_artifact(
     *,
     warmup_frac: float = 0.05,
     extra: dict | None = None,
+    flight=None,
+    flight_top_k: int = 3,
 ) -> dict:
     """Reduce an exact sweep and write the ``BENCH_taskq.json`` artifact.
 
     Reuses the fleet's frontier reductions (per-point delay stats, per-policy
     capacities, convergence, headline ratios) on the exact per-request
     delays — the trace-driven twin of ``BENCH_fleet.json``.
+
+    ``flight``: optional :class:`repro.obs.flight.FlightLog` from a
+    :meth:`TaskqSweep.replay_flight` zoom of one cell — adds a ``"flight"``
+    block with the structural counts the perf gate pins (records emitted,
+    exemplars found) plus the replayed case's label.
     """
     from repro.fleet.frontier import (
         capacity_estimates,
@@ -263,6 +303,15 @@ def write_taskq_artifact(
         "convergence": convergence_stats(result, warmup_frac),
         "headline": headline_ratios(points),
     }
+    if flight is not None:
+        exemplars = flight.exemplars(flight_top_k)
+        artifact["flight"] = {
+            "label": flight.label,
+            "requests": len(flight),
+            "records": len(flight.records()),
+            "exemplars": len(exemplars),
+            "exemplar_reqs": [ex["req"] for ex in exemplars],
+        }
     if extra:
         artifact.update(extra)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
